@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: CPU-scale graph suite mirroring the paper's
+structural regimes + timing helpers. Results print as CSV
+(name,us_per_call,derived) per the harness contract."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.graph import planted_partition, powerlaw_graph, mode_degree
+
+# CPU-scale stand-ins for the paper's SNAP suite (DESIGN.md §8): same
+# regimes (community-rich, heavy-tailed), sizes runnable on one core.
+SUITE = {
+    # name: (builder, n_nodes)
+    "ppart-8k": (lambda: planted_partition(8000, 64, 0.12, 2e-4, seed=5)[0], 8000),
+    "ppart-32k": (lambda: planted_partition(32768, 160, 0.05, 4e-5, seed=6)[0], 32768),
+    "powerlaw-16k": (lambda: powerlaw_graph(16384, m=6, seed=7), 16384),
+}
+
+
+def time_call(fn, *args, repeat: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn(*args)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.0f},{derived}"

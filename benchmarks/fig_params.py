@@ -1,0 +1,55 @@
+"""Paper Figs. 5 & 7: degree-threshold sensitivity (δ, 3δ, 5δ) and CMS
+width sensitivity (5k vs 15k columns equivalents, scaled)."""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import SUITE, row
+from repro.core import biggraphvis, default_config
+from repro.graph import mode_degree
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    name, (build, n) = list(SUITE.items())[0]
+    edges_np = build()
+    dt = max(2, mode_degree(edges_np, n))
+    base = default_config(n, len(edges_np), dt, rounds=4, iterations=10,
+                          s_cap=min(n, 16384))
+
+    # Fig 5: threshold δ, 3δ, 5δ
+    for mult in (1, 3, 5):
+        cfg = replace(base, scoda=replace(base.scoda, degree_threshold=dt * mult))
+        t0 = time.perf_counter()
+        res = biggraphvis(edges_np, n, cfg)
+        rows.append(row(
+            f"fig5/{name}/thr{mult}x", time.perf_counter() - t0,
+            f"SN={res.n_supernodes};M={res.modularity:.3f}"))
+        if quick:
+            break
+
+    # Fig 7: sketch width (cols) small vs large
+    for cols in (max(64, base.cms.cols // 3), base.cms.cols * 3):
+        cfg = replace(base, cms=replace(base.cms, cols=cols))
+        t0 = time.perf_counter()
+        res = biggraphvis(edges_np, n, cfg)
+        exact = np.zeros(cfg.s_cap)
+        deg = np.zeros(n)
+        np.add.at(deg, edges_np[:, 0], 1)
+        np.add.at(deg, edges_np[:, 1], 1)
+        np.add.at(exact, res.labels, deg)
+        live = np.arange(cfg.s_cap) < res.n_supernodes
+        err = np.mean(np.abs(res.sizes[live] - exact[live]) / np.maximum(exact[live], 1))
+        rows.append(row(
+            f"fig7/{name}/cols{cols}", time.perf_counter() - t0,
+            f"size_relerr={err:.4f}"))
+        if quick:
+            break
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks: Pallas (interpret, correctness-path) working-set
+accounting + CPU timing of the jnp production paths across the shape sweep.
+
+On CPU the timings compare the scatter-oracle vs chunked paths; the Pallas
+VMEM working set per grid step is computed analytically from the
+BlockSpecs — the number that must stay under ~16 MiB VMEM on TPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core import cms as cms_lib
+from repro.kernels.cms import ops as cms_ops
+from repro.kernels.repulsion import ops as rep_ops
+from repro.kernels.segment import ops as seg_ops
+
+
+def _vmem_repulsion(ti: int, tj: int) -> int:
+    # pos/mass/radii tiles + 4 pair blocks (dx, dy, d2, mag) in f32
+    return 4 * (ti * 2 + ti * 2 + tj * 2 + tj * 2) + 4 * 4 * ti * tj
+
+
+def _vmem_cms(rows: int, cols: int, blk: int) -> int:
+    return 4 * (rows * blk + blk + rows * cols + blk * cols)
+
+
+def _vmem_seg(tn: int, blk: int, d: int) -> int:
+    return 4 * (blk + blk * d + tn * blk + tn * d)
+
+
+def run(quick: bool = False) -> list[str]:
+    out = []
+    rng = np.random.default_rng(0)
+
+    # repulsion: production path timing + kernel VMEM accounting
+    for n in (1024, 4096) if quick else (1024, 4096, 16384):
+        pos = jnp.asarray(rng.uniform(-100, 100, (n, 2)).astype(np.float32))
+        mass = jnp.asarray(rng.uniform(0.5, 3.0, n).astype(np.float32))
+        t = time_call(lambda: rep_ops.repulsion(pos, mass, 80.0, backend="chunked").block_until_ready())
+        out.append(row(f"kernels/repulsion/chunked/n{n}", t,
+                       f"pairs_per_s={n*n/t:.2e}"))
+    for ti in (256, 512):
+        out.append(row(f"kernels/repulsion/vmem/t{ti}", 0,
+                       f"vmem_bytes={_vmem_repulsion(ti, ti)}"))
+
+    # cms update
+    cfg = cms_lib.CMSConfig(rows=4, cols=4096, seed=1)
+    for n in (65536,) if quick else (65536, 1048576):
+        keys = jnp.asarray(rng.integers(0, 100000, n).astype(np.int32))
+        w = jnp.ones(n, jnp.float32)
+        s0 = cms_lib.init_sketch(cfg)
+        t = time_call(lambda: cms_ops.update(s0, keys, w, cfg, backend="ref").block_until_ready())
+        out.append(row(f"kernels/cms/ref/n{n}", t, f"keys_per_s={n/t:.2e}"))
+    out.append(row("kernels/cms/vmem/blk1024", 0,
+                   f"vmem_bytes={_vmem_cms(4, 4096, 1024)}"))
+
+    # segment sum
+    for e, d in ((65536, 64),) if quick else ((65536, 64), (262144, 128)):
+        data = jnp.asarray(rng.standard_normal((e, d)).astype(np.float32))
+        seg = jnp.asarray(rng.integers(0, e // 16, e).astype(np.int32))
+        t = time_call(lambda: seg_ops.segment_sum(data, seg, e // 16, backend="ref").block_until_ready())
+        out.append(row(f"kernels/segment/ref/e{e}d{d}", t,
+                       f"edges_per_s={e/t:.2e}"))
+    out.append(row("kernels/segment/vmem/tn256blk512d128", 0,
+                   f"vmem_bytes={_vmem_seg(256, 512, 128)}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,110 @@
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+derives, per (arch × shape × mesh):
+
+    compute term    = FLOPs/device   / 197e12      [bf16 peak per v5e chip]
+    memory term     = HBM bytes/dev  / 819e9
+    collective term = link bytes/dev / 50e9        [ICI per link]
+
+FLOPs/device = max(cost_analysis flops, loop-adjusted HLO dot flops).
+HBM bytes    = max(cost_analysis 'bytes accessed', loop-adjusted dot
+               operand+output traffic) — both lower-bound true traffic;
+               the max is the tighter bound.
+Collectives  = ring-factor-adjusted payloads from the partitioned HLO.
+
+Also reported: MODEL_FLOPS (analytic 6·N·D / 2·N·D), the useful-compute
+ratio MODEL_FLOPS / (chips · FLOPs/dev), the dominant term, and the
+roofline fraction = t_ideal_compute / max(t_c, t_m, t_coll) where
+t_ideal = MODEL_FLOPS / (chips · peak).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    cost = rec.get("cost", {})
+    flops_dev = max(float(cost.get("flops", 0.0)), float(rec.get("hlo_dot_flops", 0.0)))
+    bytes_dev = max(
+        float(cost.get("bytes accessed", 0.0)),
+        float(rec.get("hlo_dot_traffic", rec.get("dot_traffic_bytes", 0.0)) or 0.0),
+    )
+    coll_dev = float(rec.get("collective_bytes", 0.0))
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / LINK_BW
+    model_flops = float(rec.get("meta", {}).get("model_flops", 0.0))
+    t_ideal = model_flops / (chips * PEAK_FLOPS)
+    t_step = max(t_c, t_m, t_x)
+    dominant = {t_c: "compute", t_m: "memory", t_x: "collective"}[t_step]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(chips * flops_dev, 1.0),
+        "roofline_fraction": (t_ideal / t_step) if t_step > 0 else 0.0,
+        "hbm_gib_per_dev": rec.get("bytes_per_device", 0) / 2**30,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def load_all(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = analyze_record(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def fmt_table(rows: list[dict], mesh: str = "single") -> str:
+    hdr = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
+           "useful | roofline | GiB/dev |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['hbm_gib_per_dev']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = load_all()
+    csv = []
+    for r in rows:
+        csv.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s']) * 1e6:.0f},"
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f};gib={r['hbm_gib_per_dev']:.1f}"
+        )
+    return csv
+
+
+if __name__ == "__main__":
+    rows = load_all()
+    print(fmt_table(rows, "single"))
+    print()
+    print(fmt_table(rows, "multi"))

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure plus
+the roofline summary. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="1 graph / fewer sweeps")
+    ap.add_argument("--only", default="", help="comma-separated module subset")
+    args = ap.parse_args()
+
+    from benchmarks import (fig_params, kernels_bench, roofline,
+                            table1_speedup, table2_hashes, table3_rounds)
+
+    modules = {
+        "table1": table1_speedup,
+        "table2": table2_hashes,
+        "table3": table3_rounds,
+        "figs": fig_params,
+        "kernels": kernels_bench,
+        "roofline": roofline,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        try:
+            for line in mod.run(quick=args.quick):
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 1: BigGraphVis (supergraph) vs full-graph ForceAtlas2 —
+running time, speedup, supergraph size, SG (detection) time, modularity.
+
+The paper reports 70–95× speedups on an Nvidia K20c; here the same
+pipeline runs at CPU scale on the synthetic suite and reports the same
+columns. The speedup mechanism is identical (layout cost ∝ n² drops to
+S² with S ≪ n); absolute scale is projected via §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import SUITE, row
+from repro.core import biggraphvis, default_config, modularity
+from repro.core import forceatlas2 as fa2
+from repro.graph import mode_degree, pad_edges
+from repro.graph.utils import degrees
+
+import jax.numpy as jnp
+
+FULL_ITERS = 100  # paper: 500 for full graphs; scaled 5× down like the rest
+SG_ITERS = 20  # paper: 100
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    suite = dict(list(SUITE.items())[:1]) if quick else SUITE
+    for name, (build, n) in suite.items():
+        edges_np = build()
+        dt = mode_degree(edges_np, n)
+        cfg = default_config(n, len(edges_np), dt, rounds=4, iterations=SG_ITERS,
+                             s_cap=min(n, 16384))
+
+        # --- BigGraphVis (supergraph pipeline); warm timing — the first
+        # call pays one-time jit compilation, the second is steady state
+        # (the paper's GPU numbers likewise exclude CUDA compilation)
+        biggraphvis(edges_np, n, cfg)
+        t0 = time.perf_counter()
+        res = biggraphvis(edges_np, n, cfg)
+        bgv_s = time.perf_counter() - t0
+        sg_s = res.timings["scoda_s"] + res.timings["supergraph_s"]
+
+        # --- full-graph FA2 baseline (grid repulsion — the BH analogue)
+        edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+        deg = degrees(edges, n)
+        mass = deg.astype(jnp.float32) + 1.0
+        w = jnp.ones(edges.shape[0], jnp.float32)
+        lcfg = fa2.FA2Config(iterations=FULL_ITERS, repulsion="grid",
+                             grid_size=64, use_radii=False)
+        pos, _ = fa2.layout(edges, w, mass, n, lcfg)  # compile warmup
+        jax.block_until_ready(pos)
+        t0 = time.perf_counter()
+        pos, _ = fa2.layout(edges, w, mass, n, lcfg)
+        jax.block_until_ready(pos)
+        fa2_s = time.perf_counter() - t0
+
+        speedup = fa2_s / bgv_s
+        rows.append(row(
+            f"table1/{name}/fa2_full", fa2_s,
+            f"n={n};e={len(edges_np)}"))
+        rows.append(row(
+            f"table1/{name}/biggraphvis", bgv_s,
+            f"SN={res.n_supernodes};SE={res.n_superedges};"
+            f"SGtime_ms={sg_s*1e3:.0f};speedup={speedup:.1f}x;M={res.modularity:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

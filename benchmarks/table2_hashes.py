@@ -1,0 +1,44 @@
+"""Paper Table 2: effect of the number of CMS hash functions (1–4) on
+running time, #supernodes, #superedges — plus size-estimate accuracy
+(the paper's qualitative Fig. 4 claim, quantified)."""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import SUITE, row
+from repro.core import biggraphvis, default_config
+from repro.graph import mode_degree
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    name, (build, n) = list(SUITE.items())[0]
+    edges_np = build()
+    dt = mode_degree(edges_np, n)
+    base = default_config(n, len(edges_np), dt, rounds=4, iterations=10,
+                          s_cap=min(n, 16384))
+    hash_counts = (1, 4) if quick else (1, 2, 3, 4)
+    for rows_n in hash_counts:
+        cfg = replace(base, cms=replace(base.cms, rows=rows_n))
+        t0 = time.perf_counter()
+        res = biggraphvis(edges_np, n, cfg)
+        dt_s = time.perf_counter() - t0
+        # accuracy: CMS sizes vs exact community degree-sums
+        exact = np.zeros(cfg.s_cap)
+        deg = np.zeros(n)
+        np.add.at(deg, edges_np[:, 0], 1)
+        np.add.at(deg, edges_np[:, 1], 1)
+        np.add.at(exact, res.labels, deg)
+        live = np.arange(cfg.s_cap) < res.n_supernodes
+        err = np.mean(np.abs(res.sizes[live] - exact[live]) / np.maximum(exact[live], 1))
+        rows.append(row(
+            f"table2/{name}/hash{rows_n}", dt_s,
+            f"SN={res.n_supernodes};SE={res.n_superedges};size_relerr={err:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

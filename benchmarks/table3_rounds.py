@@ -1,0 +1,34 @@
+"""Paper Table 3: effect of community-detection rounds (2/3/4) on running
+time, #supernodes, #superedges, and modularity (paper §5.3.5: communities
+merge and intra-community mass grows with rounds)."""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+from benchmarks.common import SUITE, row
+from repro.core import biggraphvis, default_config
+from repro.graph import mode_degree
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    name, (build, n) = list(SUITE.items())[0]
+    edges_np = build()
+    dt = mode_degree(edges_np, n)
+    base = default_config(n, len(edges_np), dt, rounds=4, iterations=10,
+                          s_cap=min(n, 16384))
+    round_counts = (1, 4) if quick else (1, 2, 3, 4)
+    for r in round_counts:
+        cfg = replace(base, scoda=replace(base.scoda, rounds=r))
+        t0 = time.perf_counter()
+        res = biggraphvis(edges_np, n, cfg)
+        dt_s = time.perf_counter() - t0
+        rows.append(row(
+            f"table3/{name}/rounds{r}", dt_s,
+            f"SN={res.n_supernodes};SE={res.n_superedges};M={res.modularity:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

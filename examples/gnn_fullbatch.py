@@ -1,0 +1,96 @@
+"""GNN example: full-batch GAT node classification on a planted-partition
+graph (cora-regime), plus a sampled-minibatch GIN run through the real
+CSR fanout sampler — the two GNN training modes of the assignment.
+
+    PYTHONPATH=src python examples/gnn_fullbatch.py
+"""
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gnn_archs import smoke_gnn
+from repro.graph import NeighborSampler, planted_partition
+from repro.graph.utils import to_csr
+from repro.models import gnn as gnn_lib
+from repro.models.param import init_params
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import TrainConfig, make_train_step
+from dataclasses import replace
+
+
+def full_batch_gat() -> None:
+    n, k = 600, 6
+    edges, labels = planted_partition(n, k, 0.3, 0.01, seed=1)
+    cfg = replace(smoke_gnn("gat"), d_feat=32, n_out=k, n_layers=2, d_hidden=32)
+    params = init_params(jax.random.PRNGKey(0), gnn_lib.param_specs(cfg))
+    rng = np.random.default_rng(0)
+    # features: noisy one-hot-ish community signal
+    feats = rng.standard_normal((n, 32)).astype(np.float32)
+    feats[np.arange(n), labels % 32] += 2.0
+    train_mask = (rng.random(n) < 0.5).astype(np.float32)
+    batch = {
+        "feats": jnp.asarray(feats),
+        "edges": jnp.asarray(edges),
+        "labels": jnp.asarray(labels),
+        "mask": jnp.asarray(train_mask),
+    }
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3))
+    step = jax.jit(make_train_step(functools.partial(gnn_lib.gnn_loss, cfg), tcfg))
+    state = init_opt_state(params, tcfg.adamw)
+    for i in range(60):
+        params, state, m = step(params, state, batch)
+        if i % 20 == 0:
+            print(f"[gat full-batch] step {i} loss {float(m['loss']):.3f}")
+    out = gnn_lib.forward(cfg, params, batch)
+    pred = np.asarray(jnp.argmax(out, -1))
+    test = train_mask == 0
+    acc = (pred[test] == labels[test]).mean()
+    print(f"[gat full-batch] held-out accuracy {acc:.2%}")
+    assert acc > 0.5
+
+
+def sampled_gin() -> None:
+    n = 2000
+    edges, labels = planted_partition(n, 10, 0.2, 0.005, seed=2)
+    indptr, indices = to_csr(edges, n)
+    sampler = NeighborSampler(indptr, indices, fanouts=(10, 5))
+    cfg = replace(smoke_gnn("gin"), d_feat=16, n_out=10)
+    params = init_params(jax.random.PRNGKey(1), gnn_lib.param_specs(cfg))
+    rng = np.random.default_rng(3)
+    feats_all = rng.standard_normal((n, 16)).astype(np.float32)
+    feats_all[np.arange(n), labels % 16] += 2.0
+
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=3e-3))
+    step = jax.jit(make_train_step(functools.partial(gnn_lib.gnn_loss, cfg), tcfg))
+    state = init_opt_state(params, tcfg.adamw)
+    for i in range(30):
+        seeds = rng.integers(0, n, size=64)
+        sub = sampler.sample(seeds, rng)
+        cap = sub.nodes.shape[0]
+        feats = np.zeros((cap, 16), np.float32)
+        valid = sub.nodes >= 0
+        feats[valid] = feats_all[sub.nodes[valid]]
+        lab = np.zeros(cap, np.int32)
+        lab[valid] = labels[sub.nodes[valid]]
+        batch = {
+            "feats": jnp.asarray(feats),
+            "edges": jnp.asarray(sub.edges),
+            "labels": jnp.asarray(lab),
+            "mask": jnp.asarray(sub.seed_mask.astype(np.float32)),
+        }
+        params, state, m = step(params, state, batch)
+        if i % 10 == 0:
+            print(f"[gin sampled] step {i} loss {float(m['loss']):.3f} "
+                  f"(subgraph {sub.n_nodes} nodes / {sub.n_edges} edges)")
+    print("[gin sampled] done")
+
+
+if __name__ == "__main__":
+    full_batch_gat()
+    sampled_gin()

@@ -1,0 +1,50 @@
+"""The paper's own workload as a dry-run citizen: multi-device BigGraphVis.
+
+Two step kinds (DESIGN.md §4):
+  * detect — one SCoDA streaming round + CMS sizing over *edge shards*
+             (labels merge by all-reduce-min, sketches by all-reduce-add);
+  * layout — one ForceAtlas2 iteration on the supergraph (n-body DP:
+             node tiles sharded, positions all-gathered).
+
+Shapes mirror the paper's biggest graphs (Table 1): soc-LiveJournal
+(4.0M nodes / 34.7M edges) and web-BerkStan (0.69M / 6.6M), plus the
+supergraph layout at the paper's reported supernode counts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig, ShapeSpec, pad_to
+
+
+@dataclass(frozen=True)
+class BGVDryConfig:
+    name: str = "biggraphvis"
+    rounds_per_step: int = 1
+    cms_rows: int = 4
+
+
+def biggraphvis() -> ArchConfig:
+    shapes = {
+        "detect_livejournal": ShapeSpec(
+            "detect_livejournal", "bgv_detect",
+            n_nodes=pad_to(3_997_962, 512), n_edges=pad_to(34_681_189, 512),
+            n_out=pad_to(34_500, 512),  # CMS cols (paper Table 1)
+        ),
+        "detect_berkstan": ShapeSpec(
+            "detect_berkstan", "bgv_detect",
+            n_nodes=pad_to(685_230, 512), n_edges=pad_to(6_649_470, 512),
+            n_out=pad_to(6_500, 512),
+        ),
+        "layout_livejournal": ShapeSpec(
+            "layout_livejournal", "bgv_layout",
+            # paper Table 1: 248,188 supernodes / 566,160 superedges
+            n_nodes=pad_to(248_188, 512), n_edges=pad_to(566_160, 512),
+        ),
+        "layout_berkstan": ShapeSpec(
+            "layout_berkstan", "bgv_layout",
+            n_nodes=pad_to(31_213, 512), n_edges=pad_to(57_382, 512),
+        ),
+    }
+    return ArchConfig(name="biggraphvis", family="bgv", profile="gnn",
+                      model=BGVDryConfig(), shapes=shapes)

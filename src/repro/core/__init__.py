@@ -1,0 +1,15 @@
+"""BigGraphVis core: streaming community detection + CMS + supergraph +
+ForceAtlas2, per the paper. See DESIGN.md for the GPU→TPU adaptation."""
+from repro.core.scoda import ScodaConfig, detect_communities, dense_labels
+from repro.core.cms import CMSConfig, init_sketch, update, query, merge
+from repro.core.supergraph import Supergraph, build_supergraph, aggregate_edges
+from repro.core.forceatlas2 import FA2Config, layout, step, init_positions
+from repro.core.modularity import modularity
+from repro.core.coloring import color_groups, node_colors, write_svg, PALETTE
+from repro.core.pipeline import (
+    BGVConfig,
+    BGVResult,
+    biggraphvis,
+    default_config,
+    full_layout_colored,
+)

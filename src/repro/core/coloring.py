@@ -1,0 +1,91 @@
+"""Community-size coloring (paper §4.3).
+
+11 qualitative buckets: the *smaller* communities that together account for
+50% of total size α share the first color (brown); the remaining
+communities are split into 10 equal-count groups colored small→big:
+brown, light purple, purple, light orange, orange, light red, red,
+light green, green, light blue, blue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ColorBrewer-flavoured qualitative scale, small → big (RGB, 0-255).
+PALETTE = np.array(
+    [
+        [140, 86, 75],  # brown (bulk of small communities)
+        [197, 176, 213],  # light purple
+        [148, 103, 189],  # purple
+        [255, 187, 120],  # light orange
+        [255, 127, 14],  # orange
+        [255, 152, 150],  # light red
+        [214, 39, 40],  # red
+        [152, 223, 138],  # light green
+        [44, 160, 44],  # green
+        [174, 199, 232],  # light blue
+        [31, 119, 180],  # blue
+    ],
+    dtype=np.uint8,
+)
+
+
+@jax.jit
+def color_groups(sizes: jnp.ndarray) -> jnp.ndarray:
+    """[S] sizes → [S] color-group index in [0, 11). Zero-size slots → 0."""
+    s = sizes.shape[0]
+    order = jnp.argsort(sizes)  # ascending
+    sorted_sizes = sizes[order]
+    total = jnp.sum(sizes)
+    csum = jnp.cumsum(sorted_sizes)
+    # Communities in the lower 50% of cumulative mass → group 0 (brown).
+    in_bulk = csum <= 0.5 * total
+    n_bulk = jnp.sum(in_bulk)
+    # Remaining communities → 10 equal-count groups by rank.
+    rank = jnp.arange(s)
+    rest_rank = rank - n_bulk
+    n_rest = jnp.maximum(s - n_bulk, 1)
+    group_rest = 1 + (rest_rank * 10) // n_rest
+    group_sorted = jnp.where(in_bulk, 0, jnp.clip(group_rest, 1, 10))
+    groups = jnp.zeros(s, jnp.int32).at[order].set(group_sorted.astype(jnp.int32))
+    return jnp.where(sizes > 0, groups, 0)
+
+
+def node_colors(groups: np.ndarray) -> np.ndarray:
+    """Group indices → RGB."""
+    return PALETTE[np.asarray(groups)]
+
+
+def write_svg(path: str, pos: np.ndarray, radii: np.ndarray, groups: np.ndarray,
+              edges: np.ndarray | None = None, max_nodes: int = 200_000) -> None:
+    """Minimal SVG renderer (no display stack on TPU hosts — DESIGN.md §2)."""
+    pos = np.asarray(pos)[:max_nodes]
+    radii = np.asarray(radii)[:max_nodes]
+    colors = node_colors(np.asarray(groups)[:max_nodes])
+    lo = pos.min(axis=0)
+    hi = pos.max(axis=0)
+    span = np.maximum(hi - lo, 1e-6)
+    size = 1024.0
+    xy = (pos - lo) / span * size
+    rr = radii / span.max() * size
+    rr = np.clip(rr, 0.5, size / 8)
+    parts = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{int(size)}" height="{int(size)}">']
+    if edges is not None:
+        for u, v in np.asarray(edges):
+            if u < len(xy) and v < len(xy):
+                parts.append(
+                    f'<line x1="{xy[u,0]:.1f}" y1="{xy[u,1]:.1f}" '
+                    f'x2="{xy[v,0]:.1f}" y2="{xy[v,1]:.1f}" '
+                    'stroke="#cccccc" stroke-width="0.3"/>'
+                )
+    for (x, y), r, (cr, cg, cb) in zip(xy, rr, colors):
+        parts.append(
+            f'<circle cx="{x:.1f}" cy="{y:.1f}" r="{r:.1f}" '
+            f'fill="rgb({cr},{cg},{cb})" fill-opacity="0.8"/>'
+        )
+    parts.append("</svg>")
+    with open(path, "w") as f:
+        f.write("\n".join(parts))

@@ -1,0 +1,38 @@
+"""Newman modularity (paper §5.3.2, Eq. 2) via segment sums.
+
+    Q = Σ_c [ e_c / m  −  (d_c / 2m)² ]
+
+where e_c = intra-community edges of c, d_c = total degree of c, m = |E|.
+Equivalent to Eq. 2 and computable in O(E) with two scatter-adds — no
+pairwise term needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes",))
+def modularity(edges: jnp.ndarray, labels: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    """edges [E,2] int32 (padded slots = n_nodes), labels [n_nodes] int32."""
+    trash = n_nodes
+    labels_ext = jnp.concatenate([labels, jnp.array([-1], jnp.int32)])
+    cu = labels_ext[jnp.minimum(edges[:, 0], trash)]
+    cv = labels_ext[jnp.minimum(edges[:, 1], trash)]
+    valid = (edges[:, 0] != trash) & (edges[:, 1] != trash)
+    m = jnp.sum(valid).astype(jnp.float32)
+
+    # intra edges per community
+    intra = jnp.zeros(n_nodes + 1, jnp.float32)
+    key = jnp.where(valid & (cu == cv), cu, n_nodes)
+    intra = intra.at[key].add(1.0)[:n_nodes]
+
+    # degree per community
+    dcom = jnp.zeros(n_nodes + 1, jnp.float32)
+    dcom = dcom.at[jnp.where(valid, cu, n_nodes)].add(1.0)
+    dcom = dcom.at[jnp.where(valid, cv, n_nodes)].add(1.0)
+    dcom = dcom[:n_nodes]
+
+    return jnp.sum(intra / m - (dcom / (2.0 * m)) ** 2)

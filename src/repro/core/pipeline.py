@@ -1,0 +1,163 @@
+"""End-to-end BigGraphVis pipeline (paper Fig. 2 / Algorithm 3):
+
+    edge stream ──► SCoDA communities ──► CMS sizing ──► supergraph
+                ──► ForceAtlas2 layout ──► colored supernode drawing
+
+plus the paper's second output mode: a *full-graph* ForceAtlas2 layout
+recolored by the detected communities (§4.3).
+
+Every stage is jitted; ``biggraphvis()`` is the single-host driver. The
+multi-device form (edge shards streamed per device; CMS merged by
+all-reduce, labels by all-reduce-min — DESIGN.md §4) is lowered and
+compiled for the production meshes by ``launch/steps.build_bgv_step``
+(the ``biggraphvis`` dry-run cells).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cms as cms_lib
+from repro.core import forceatlas2 as fa2
+from repro.core.coloring import color_groups
+from repro.core.modularity import modularity
+from repro.core.scoda import ScodaConfig, detect_communities
+from repro.core.supergraph import Supergraph, build_supergraph
+from repro.graph.utils import degrees, mode_degree, pad_edges
+
+
+@dataclass(frozen=True)
+class BGVConfig:
+    scoda: ScodaConfig
+    cms: cms_lib.CMSConfig
+    layout: fa2.FA2Config
+    s_cap: int = 65536  # supernode capacity
+    max_super_edges: int = 262144
+
+
+@dataclass
+class BGVResult:
+    positions: np.ndarray  # [s_cap, 2]
+    sizes: np.ndarray  # [s_cap]
+    groups: np.ndarray  # [s_cap] color group
+    labels: np.ndarray  # [n] node → dense community
+    supergraph: Supergraph
+    modularity: float
+    n_supernodes: int
+    n_superedges: int
+    timings: dict = field(default_factory=dict)
+
+
+def default_config(
+    n_nodes: int,
+    n_edges: int,
+    degree_threshold: int,
+    rounds: int = 4,
+    iterations: int = 100,
+    s_cap: int | None = None,
+) -> BGVConfig:
+    """Paper defaults: 4 hash rows, cols ≈ 1e-4·|E| (min 256), δ = mode degree."""
+    cols = max(256, int(n_edges * 1e-4) * 1000 // 1000)
+    cols = max(256, n_edges // 1000)
+    return BGVConfig(
+        scoda=ScodaConfig(degree_threshold=degree_threshold, rounds=rounds),
+        cms=cms_lib.CMSConfig(rows=4, cols=cols),
+        layout=fa2.FA2Config(iterations=iterations),
+        s_cap=s_cap or min(n_nodes, 65536),
+        max_super_edges=min(4 * n_edges, 262144),
+    )
+
+
+def _block(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    return out
+
+
+def biggraphvis(edges_np: np.ndarray, n_nodes: int, cfg: BGVConfig) -> BGVResult:
+    """Single-host driver. ``edges_np`` [E,2] int32, unpadded."""
+    t = {}
+    e_cap = len(edges_np)
+    edges = jnp.asarray(pad_edges(edges_np, e_cap, n_nodes))
+
+    t0 = time.perf_counter()
+    deg = _block(lambda e: degrees(e, n_nodes), edges)
+    labels, _scoda_deg = _block(
+        lambda e: detect_communities(e, n_nodes, cfg.scoda), edges
+    )
+    t["scoda_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sg = _block(
+        lambda e, l, d: build_supergraph(
+            e, l, d, n_nodes, cfg.s_cap, cfg.max_super_edges, cfg.cms
+        ),
+        edges, labels, deg,
+    )
+    t["supergraph_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    # Size the layout stage to the LIVE supernode count (padded to a
+    # power of two for shape reuse): laying out the full s_cap padding
+    # would erase the paper's headline speedup — the whole point is that
+    # the supergraph is orders of magnitude smaller than the graph.
+    s_live = max(int(sg.n_supernodes), 2)
+    s_layout = 1 << (s_live - 1).bit_length()
+    s_layout = min(max(s_layout, 64), cfg.s_cap)
+    e_live = max(int(sg.n_superedges), 1)
+    e_layout = min(1 << (e_live - 1).bit_length(), sg.edges.shape[0])
+    mass = jnp.maximum(sg.sizes[:s_layout], 0.0) + jnp.where(
+        jnp.arange(s_layout) < sg.n_supernodes, 1.0, 0.0
+    )
+    mass = jnp.where(jnp.arange(s_layout) < sg.n_supernodes, mass, 0.0)
+    sedges = jnp.minimum(sg.edges[:e_layout], s_layout)  # trash → s_layout
+    pos_live, _trace = _block(
+        lambda e, w, m: fa2.layout(e, w, m, s_layout, cfg.layout),
+        sedges, sg.weights[:e_layout], mass,
+    )
+    pos = jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
+    t["layout_s"] = time.perf_counter() - t0
+
+    groups = color_groups(sg.sizes)
+    q = float(modularity(edges, sg.labels, n_nodes))
+    return BGVResult(
+        positions=np.asarray(pos),
+        sizes=np.asarray(sg.sizes),
+        groups=np.asarray(groups),
+        labels=np.asarray(sg.labels),
+        supergraph=sg,
+        modularity=q,
+        n_supernodes=int(sg.n_supernodes),
+        n_superedges=int(sg.n_superedges),
+        timings=t,
+    )
+
+
+def full_layout_colored(
+    edges_np: np.ndarray, n_nodes: int, cfg: BGVConfig, iterations: int = 500
+) -> tuple[np.ndarray, np.ndarray]:
+    """Paper's comparison/styling path: full-graph FA2 (grid repulsion for
+    scale) + BigGraphVis community colors. Returns (pos [n,2], groups [n])."""
+    e_cap = len(edges_np)
+    edges = jnp.asarray(pad_edges(edges_np, e_cap, n_nodes))
+    deg = degrees(edges, n_nodes)
+    labels, _ = detect_communities(edges, n_nodes, cfg.scoda)
+    sg = build_supergraph(
+        edges, labels, deg, n_nodes, cfg.s_cap, cfg.max_super_edges, cfg.cms
+    )
+    lcfg = fa2.FA2Config(
+        iterations=iterations,
+        repulsion="grid" if n_nodes > 4096 else "exact",
+        use_radii=False,
+        gravity=cfg.layout.gravity,
+        repulsion_k=cfg.layout.repulsion_k,
+    )
+    mass = deg.astype(jnp.float32) + 1.0
+    w = jnp.ones(edges.shape[0], jnp.float32)
+    pos, _ = fa2.layout(edges, w, mass, n_nodes, lcfg)
+    node_groups = color_groups(sg.sizes)[jnp.clip(sg.labels, 0, cfg.s_cap - 1)]
+    return np.asarray(pos), np.asarray(node_groups)

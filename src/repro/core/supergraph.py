@@ -1,0 +1,116 @@
+"""Supergraph construction (paper §4.1): communities → weighted supernodes,
+inter-community edges → weighted superedges.
+
+Static-shape implementation: superedges are deduplicated by lexsorting the
+canonicalized (min,max) community pairs and segment-summing multiplicities
+into a fixed ``max_super_edges`` capacity. All jittable.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cms as cms_lib
+from repro.core.scoda import dense_labels
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclass
+class Supergraph:
+    """Padded supergraph. Padded superedge slots point at ``s_cap`` (trash)."""
+
+    edges: jnp.ndarray  # [max_super_edges, 2] int32, dense community ids
+    weights: jnp.ndarray  # [max_super_edges] float32 (edge multiplicity)
+    sizes: jnp.ndarray  # [s_cap] float32 supernode weights (CMS estimate)
+    n_supernodes: jnp.ndarray  # scalar int32
+    n_superedges: jnp.ndarray  # scalar int32
+    labels: jnp.ndarray  # [n_nodes] int32 node → dense community id
+
+
+@functools.partial(jax.jit, static_argnames=("s_cap", "max_super_edges"))
+def aggregate_edges(
+    edges: jnp.ndarray,
+    labels_dense: jnp.ndarray,
+    s_cap: int,
+    max_super_edges: int,
+):
+    """Map node edges through community labels, drop intra edges, dedupe.
+
+    Returns (sedges [cap,2], sweights [cap], n_superedges).
+    """
+    trash = labels_dense.shape[0]  # edges padded with n_nodes
+    labels_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
+    cu = labels_ext[jnp.minimum(edges[:, 0], trash)]
+    cv = labels_ext[jnp.minimum(edges[:, 1], trash)]
+    a = jnp.minimum(cu, cv)
+    b = jnp.maximum(cu, cv)
+    valid = (a != b) & (a < s_cap) & (b < s_cap)
+    a = jnp.where(valid, a, s_cap)
+    b = jnp.where(valid, b, s_cap)
+
+    # Lexsort by (a, b); invalid slots (s_cap, s_cap) sort last.
+    order = jnp.lexsort((b, a))
+    a_s, b_s = a[order], b[order]
+    new_pair = jnp.concatenate(
+        [jnp.array([True]), (a_s[1:] != a_s[:-1]) | (b_s[1:] != b_s[:-1])]
+    )
+    new_pair = new_pair & (a_s != s_cap)
+    seg = jnp.cumsum(new_pair) - 1  # dense superedge id per sorted slot (or -1 prefix)
+    seg = jnp.where(a_s != s_cap, seg, max_super_edges)
+
+    sw = jnp.zeros(max_super_edges + 1, jnp.float32).at[seg].add(1.0)
+    se = jnp.full((max_super_edges + 1, 2), s_cap, jnp.int32)
+    se = se.at[seg, 0].set(a_s)  # duplicate writes carry identical values
+    se = se.at[seg, 1].set(b_s)
+    n_superedges = jnp.sum(new_pair).astype(jnp.int32)
+    return se[:max_super_edges], sw[:max_super_edges], n_superedges
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_nodes", "s_cap", "max_super_edges", "cms_cfg")
+)
+def build_supergraph(
+    edges: jnp.ndarray,
+    labels: jnp.ndarray,
+    node_deg: jnp.ndarray,
+    n_nodes: int,
+    s_cap: int,
+    max_super_edges: int,
+    cms_cfg: cms_lib.CMSConfig,
+) -> Supergraph:
+    """Full paper path: dense-relabel communities, CMS-size them, dedupe edges.
+
+    Community size (paper §4.1): sum of *graph* degrees of member nodes
+    (≈ 2×intra edges), accumulated through the count–min sketch keyed by
+    community id — never an exact counter.
+    """
+    labels_dense, n_supernodes = dense_labels(labels, n_nodes)
+    # CMS sizing: one update per node, weight = its true graph degree.
+    sketch = cms_lib.init_sketch(cms_cfg)
+    sketch = cms_lib.update(sketch, labels_dense, node_deg.astype(jnp.float32), cms_cfg)
+    sizes = cms_lib.query(sketch, jnp.arange(s_cap, dtype=jnp.int32), cms_cfg)
+    # Mask queries beyond the live community count.
+    sizes = jnp.where(jnp.arange(s_cap) < n_supernodes, sizes, 0.0)
+
+    sedges, sweights, n_superedges = aggregate_edges(
+        edges, labels_dense, s_cap, max_super_edges
+    )
+    return Supergraph(
+        edges=sedges,
+        weights=sweights,
+        sizes=sizes,
+        n_supernodes=n_supernodes,
+        n_superedges=n_superedges,
+        labels=labels_dense,
+    )
+
+
+jax.tree_util.register_dataclass(
+    Supergraph,
+    data_fields=["edges", "weights", "sizes", "n_supernodes", "n_superedges", "labels"],
+    meta_fields=[],
+)

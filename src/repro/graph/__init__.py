@@ -1,0 +1,16 @@
+"""Graph substrate: generators, IO, padding, degrees, neighbor sampling."""
+from repro.graph.generators import (
+    planted_partition,
+    powerlaw_graph,
+    grid_mesh,
+    batched_molecules,
+    erdos_renyi,
+)
+from repro.graph.utils import (
+    degrees,
+    mode_degree,
+    pad_edges,
+    pad_to_multiple,
+    EDGE_SENTINEL,
+)
+from repro.graph.sampling import NeighborSampler

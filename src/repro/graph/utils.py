@@ -1,0 +1,57 @@
+"""Graph padding / degree utilities (jit-friendly, static shapes)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Padded edge slots point both endpoints at the trash node (index n_nodes).
+EDGE_SENTINEL = -1
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_edges(edges: np.ndarray, capacity: int, n_nodes: int) -> np.ndarray:
+    """Pad an [E,2] edge list to [capacity,2]; padded slots point at the trash
+    node ``n_nodes`` (arrays indexed by nodes are sized n_nodes+1)."""
+    e = len(edges)
+    if e > capacity:
+        raise ValueError(f"edge count {e} exceeds capacity {capacity}")
+    out = np.full((capacity, 2), n_nodes, dtype=np.int32)
+    out[:e] = edges
+    return out
+
+
+def degrees(edges: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
+    """Node degrees from an undirected padded edge list ([E,2], trash=n_nodes)."""
+    deg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
+    deg = deg.at[edges[:, 0]].add(1)
+    deg = deg.at[edges[:, 1]].add(1)
+    return deg[:n_nodes]
+
+
+def mode_degree(edges: np.ndarray, n_nodes: int) -> int:
+    """The paper's default degree threshold: the most common nonzero degree."""
+    deg = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.add.at(deg, edges[:, 0], 1)
+    np.add.at(deg, edges[:, 1], 1)
+    deg = deg[:n_nodes]
+    deg = deg[deg > 0]
+    if len(deg) == 0:
+        return 1
+    counts = np.bincount(deg)
+    counts[0] = 0
+    return int(np.argmax(counts))
+
+
+def to_csr(edges: np.ndarray, n_nodes: int) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetrized CSR (indptr, indices) from an undirected edge list."""
+    src = np.concatenate([edges[:, 0], edges[:, 1]])
+    dst = np.concatenate([edges[:, 1], edges[:, 0]])
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, dst.astype(np.int32)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: count–min sketch update as one-hot × matmul.
+
+GPU BigGraphVis updates the sketch with atomicAdd — random-access writes.
+The TPU adaptation (DESIGN.md §2) converts a block of B hashed keys into a
+one-hot [B, C] matrix per row and accumulates
+
+    sketch[r] += wᵀ @ onehot(h[r])        (a [1,B]·[B,C] matmul → MXU)
+
+The sketch ([R, C], C ≤ ~16k ⇒ ≤ 256 KB f32) stays resident in VMEM as a
+revisited output block across the key-block grid; keys stream through VMEM
+in blocks of ``blk``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(h_ref, w_ref, o_ref, *, rows: int, cols: int, blk: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[0, :]  # [blk]
+    wv = jnp.where(h_ref[0, :] >= 0, w, 0.0)  # padding mask (h<0)
+    col_ids = jax.lax.broadcasted_iota(jnp.int32, (blk, cols), 1)
+    acc = o_ref[...]
+    for r in range(rows):  # rows ≤ 4: unrolled
+        h = h_ref[r, :]  # [blk]
+        onehot = jnp.where(col_ids == h[:, None], 1.0, 0.0)  # [blk, cols]
+        contrib = jnp.dot(
+            wv[None, :], onehot, preferred_element_type=jnp.float32
+        )  # [1, cols] on the MXU
+        acc = acc.at[r, :].add(contrib[0])
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "blk", "interpret"))
+def cms_update_pallas(
+    sketch: jnp.ndarray,  # [rows, cols] f32
+    h: jnp.ndarray,  # [rows, n] int32 bucket ids (negative = padding)
+    w: jnp.ndarray,  # [n] f32
+    cols: int,
+    # blk=256 keeps the [blk, cols] one-hot under VMEM for cols ≤ 12k
+    # (blk=1024 × cols=4096 already costs 16.9 MiB — caught by
+    # benchmarks/kernels_bench.py's working-set accounting).
+    blk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    rows, n = h.shape
+    assert sketch.shape == (rows, cols)
+    n_pad = ((n + blk - 1) // blk) * blk
+    h_p = jnp.pad(h, ((0, 0), (0, n_pad - n)), constant_values=-1)
+    w_p = jnp.pad(w, (0, n_pad - n))[None, :]  # [1, n_pad]
+    grid = (n_pad // blk,)
+    delta = pl.pallas_call(
+        functools.partial(_kernel, rows=rows, cols=cols, blk=blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, blk), lambda i: (0, i)),
+            pl.BlockSpec((1, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(h_p, w_p)
+    return sketch + delta

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the count–min sketch update kernel.
+
+Semantics: given pre-hashed bucket indices ``h`` [rows, n] and weights
+``w`` [n], add w[e] at sketch[r, h[r, e]] for every row r. Negative buckets
+(padding) are skipped.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cms_update_ref(sketch: jnp.ndarray, h: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    rows = jnp.arange(sketch.shape[0], dtype=jnp.int32)[:, None]
+    wv = jnp.where(h[0] >= 0, w, 0.0).astype(sketch.dtype)
+    hh = jnp.maximum(h, 0)
+    return sketch.at[rows, hh].add(wv[None, :])

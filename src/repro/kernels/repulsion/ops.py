@@ -1,0 +1,84 @@
+"""Jit'd public wrapper for the n-body repulsion kernel.
+
+Backend selection:
+  * TPU            → Pallas kernel (nbody.py)
+  * CPU, small n   → dense jnp oracle (fast enough, exact)
+  * CPU, large n   → j-chunked jnp scan (same math, bounded memory) —
+                     interpret-mode Pallas is too slow for production CPU
+                     use; the kernel itself is validated in interpret mode
+                     by tests/test_kernels_repulsion.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.repulsion.nbody import repulsion_pallas
+from repro.kernels.repulsion.ref import EPS, repulsion_ref
+
+
+def _pad(x, n_pad, fill=0.0):
+    pad = [(0, n_pad - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("kr", "chunk", "use_radii"))
+def repulsion_chunked(pos, mass, kr: float, radii=None, chunk: int = 1024,
+                      use_radii: bool = True):
+    """Scan over j-chunks; identical math to ref, O(n·chunk) live memory."""
+    n = pos.shape[0]
+    n_pad = ((n + chunk - 1) // chunk) * chunk
+    pos_p = _pad(pos, n_pad)
+    mass_p = _pad(mass, n_pad)
+    rad_p = _pad(radii, n_pad) if (radii is not None and use_radii) else jnp.zeros(n_pad, pos.dtype)
+    idx = jnp.arange(n_pad)
+
+    pj = pos_p.reshape(-1, chunk, 2)
+    mj = mass_p.reshape(-1, chunk)
+    rj = rad_p.reshape(-1, chunk)
+    ij = idx.reshape(-1, chunk)
+
+    def body(acc, blk):
+        pjc, mjc, rjc, ijc = blk
+        dx = pos_p[:, 0:1] - pjc[None, :, 0]
+        dy = pos_p[:, 1:2] - pjc[None, :, 1]
+        d2 = dx * dx + dy * dy
+        d = jnp.sqrt(jnp.maximum(d2, EPS * EPS))
+        eff = jnp.maximum(d - rad_p[:, None] - rjc[None, :], EPS) if use_radii else jnp.maximum(d, EPS)
+        mag = kr * mass_p[:, None] * mjc[None, :] / (eff * d)
+        mag = jnp.where(idx[:, None] == ijc[None, :], 0.0, mag)
+        fx = jnp.sum(mag * dx, axis=1)
+        fy = jnp.sum(mag * dy, axis=1)
+        return acc + jnp.stack([fx, fy], axis=1), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((n_pad, 2), pos.dtype), (pj, mj, rj, ij))
+    return acc[:n]
+
+
+def repulsion(pos, mass, kr: float, radii=None, backend: str = "auto",
+              tile: int = 512):
+    """FA2 repulsion forces. pos [n,2], mass [n] → [n,2].
+
+    Padded entries must carry mass 0 (they then exert/receive no force).
+    """
+    n = pos.shape[0]
+    use_radii = radii is not None
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        backend = "pallas" if on_tpu else ("ref" if n <= 2048 else "chunked")
+    if backend == "ref":
+        return repulsion_ref(pos, mass, kr, radii=radii)
+    if backend == "chunked":
+        return repulsion_chunked(pos, mass, kr, radii=radii, use_radii=use_radii)
+    # pallas (or explicit interpret validation)
+    interpret = backend == "interpret" or jax.default_backend() != "tpu"
+    t = min(tile, max(128, n))
+    n_pad = ((n + t - 1) // t) * t
+    pos_p = _pad(pos, n_pad)
+    mass_p = _pad(mass, n_pad)
+    rad_p = _pad(radii, n_pad) if use_radii else jnp.zeros(n_pad, pos.dtype)
+    out = repulsion_pallas(pos_p, mass_p, rad_p, kr, ti=t, tj=t,
+                           use_radii=use_radii, interpret=interpret)
+    return out[:n]

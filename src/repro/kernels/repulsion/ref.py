@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for FA2 degree-weighted n-body repulsion.
+
+    f_i = Σ_{j≠i} kr · m_i · m_j · (x_i − x_j) / d_ij²
+
+with the supernode variant shifting the interaction distance by the two
+radii (paper §4.1: big communities get space ∝ √size):
+
+    d'_ij = max(d_ij − r_i − r_j, ε)
+    f_i   = Σ kr · m_i · m_j · û_ij / d'_ij
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-4
+
+
+def repulsion_ref(
+    pos: jnp.ndarray,
+    mass: jnp.ndarray,
+    kr: float,
+    radii: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """O(n²) dense reference. pos [n,2] f32, mass [n] f32 → forces [n,2]."""
+    diff = pos[:, None, :] - pos[None, :, :]  # [n, n, 2]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d = jnp.sqrt(jnp.maximum(d2, EPS * EPS))
+    if radii is not None:
+        eff = jnp.maximum(d - radii[:, None] - radii[None, :], EPS)
+    else:
+        eff = jnp.maximum(d, EPS)
+    mag = kr * mass[:, None] * mass[None, :] / (eff * d)  # /d normalizes diff
+    mag = jnp.where(jnp.eye(pos.shape[0], dtype=bool), 0.0, mag)
+    return jnp.sum(mag[..., None] * diff, axis=1)

@@ -1,0 +1,22 @@
+"""Jit'd public wrapper: segment-sum via Pallas on TPU, XLA scatter on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment.ref import segment_sum_ref
+from repro.kernels.segment.seg_matmul import segment_sum_pallas
+
+
+def segment_sum(
+    data: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    n_segments: int,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return segment_sum_ref(data, seg_ids, n_segments)
+    interpret = backend == "interpret" or jax.default_backend() != "tpu"
+    return segment_sum_pallas(data, seg_ids, n_segments, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the segment-sum matmul kernel: plain segment_sum.
+
+Out-of-range segment ids (e.g. the edge-padding trash id == n_segments)
+are dropped, matching ``jax.ops.segment_sum`` semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(data: jnp.ndarray, seg_ids: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, seg_ids, num_segments=n_segments)

@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell and record memory/cost/collective evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json, consumed
+by benchmarks/roofline.py. The XLA_FLAGS line above MUST precede any jax
+import (device count locks at first init) and is deliberately NOT set
+anywhere else in the repo — smoke tests see 1 device.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _mem_dict(ma) -> dict:
+    keys = [
+        "generated_code_size_in_bytes", "argument_size_in_bytes",
+        "output_size_in_bytes", "alias_size_in_bytes", "temp_size_in_bytes",
+    ]
+    return {k: getattr(ma, k, 0) for k in keys}
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False, save_hlo: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch_name}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    arch = get_config(arch_name)
+    shape = arch.shapes[shape_name]
+    rec = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "status": "", "profile": arch.profile,
+    }
+    if shape.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = shape.skip
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        built = build_step(arch, shape, mesh)
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(
+                built.fn,
+                in_shardings=built.in_shardings,
+                out_shardings=built.out_shardings,
+                donate_argnums=built.donate,
+            ).lower(*built.abstract_args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        print(f"[{arch_name}/{shape_name}/{mesh_kind}] memory_analysis:", ma)
+        ca = compiled.cost_analysis() or {}
+        print(f"[{arch_name}/{shape_name}/{mesh_kind}] cost_analysis flops:",
+              ca.get("flops"), "bytes:", ca.get("bytes accessed"))
+        txt = compiled.as_text()
+        hlo = analyze_hlo(txt)
+
+        per_dev = (
+            _mem_dict(ma)["argument_size_in_bytes"]
+            + _mem_dict(ma)["output_size_in_bytes"]
+            + _mem_dict(ma)["temp_size_in_bytes"]
+            - _mem_dict(ma)["alias_size_in_bytes"]
+        )
+        rec.update(
+            status="ok",
+            n_devices=len(mesh.devices.flatten()),
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=_mem_dict(ma),
+            bytes_per_device=per_dev,
+            cost={k: v for k, v in ca.items()},
+            hlo_dot_flops=hlo.dot_flops,
+            hlo_dot_traffic=hlo.dot_traffic_bytes,
+            collective_bytes=hlo.collective_bytes,
+            collective_counts=hlo.collective_counts,
+            n_whiles=hlo.n_whiles,
+            n_dots=hlo.n_dots,
+            meta=built.meta,
+        )
+        if save_hlo:
+            with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(txt)
+    except Exception as e:  # record the failure — it is a bug to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch_name}/{shape_name}/{mesh_kind}] FAILED: {rec['error'][:200]}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for name, builder in REGISTRY.items():
+            for sname in builder().shapes:
+                cells.append((name, sname))
+    else:
+        arch = get_config(args.arch)
+        shapes = [args.shape] if args.shape else list(arch.shapes)
+        cells = [(args.arch, s) for s in shapes]
+
+    n_ok = n_fail = n_skip = 0
+    for arch_name, shape_name in cells:
+        for mk in meshes:
+            rec = run_cell(arch_name, shape_name, mk, args.out,
+                           force=args.force, save_hlo=args.save_hlo)
+            s = rec["status"]
+            n_ok += s == "ok"
+            n_fail += s == "error"
+            n_skip += s == "skipped"
+            print(f"  -> {arch_name}/{shape_name}/{mk}: {s} "
+                  f"(compile {rec.get('compile_s', '-')}s, "
+                  f"{rec.get('bytes_per_device', 0)/2**30:.2f} GiB/dev)")
+    print(f"dry-run done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""HLO-text analysis for the roofline: loop-adjusted FLOPs, dot HBM
+traffic, and collective payloads — from the *partitioned* module, so all
+shapes are per-device.
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE (verified empirically,
+DESIGN.md §8). jax lowers lax.scan to while ops carrying
+``backend_config={"known_trip_count":{"n":...}}``, and every op's metadata
+``op_name`` records its logical nesting path (".../while/body/..."). So:
+
+  1. map every while op's op_name path → trip count,
+  2. build a symbol table %name → (dtype, dims) from op definitions,
+  3. for every dot: flops = 2·prod(out)·prod(lhs contracted dims), traffic
+     = bytes(lhs)+bytes(rhs)+bytes(out); for every collective: payload =
+     operand bytes × ring factor (2(k−1)/k all-reduce, (k−1)/k AG/RS);
+  4. multiply each contribution by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_TRIP_RE = re.compile(r"known_trip_count[\\\"':{\s]*n[\\\"':\s]*(\d+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _nbytes(dtype: str, dims: tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _parse_dims(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x)
+
+
+@dataclass
+class HLOStats:
+    dot_flops: float = 0.0  # per-device, loop-adjusted
+    dot_traffic_bytes: float = 0.0  # per-device HBM traffic through dots
+    collective_bytes: float = 0.0  # per-device link payload, ring-adjusted
+    collective_counts: dict = field(default_factory=dict)
+    n_whiles: int = 0
+    n_dots: int = 0
+
+
+def _group_size(line: str, default_k: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:  # [num_groups, group_size]
+        return int(m.group(2))
+    return default_k
+
+
+def analyze_hlo(text: str, default_group: int = 16) -> HLOStats:
+    stats = HLOStats()
+    counts: dict[str, float] = defaultdict(float)
+
+    # pass 1: symbol table + while trip counts
+    symbols: dict[str, tuple[str, tuple[int, ...]]] = {}
+    trips: dict[str, int] = {}
+    lines = text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            symbols[m.group(1)] = (m.group(2), _parse_dims(m.group(3)))
+        if " while(" in line:
+            om = _OPNAME_RE.search(line)
+            tm = _TRIP_RE.search(line)
+            if om and tm:
+                trips[om.group(1)] = int(tm.group(1))
+    stats.n_whiles = len(trips)
+
+    def multiplier(path: str) -> int:
+        mult = 1
+        for wpath, n in trips.items():
+            if path.startswith(wpath + "/") or path.startswith(wpath + "."):
+                mult *= n
+        return mult
+
+    # pass 2: dots + collectives
+    for line in lines:
+        ls = line.strip()
+        if not ls.startswith("%") and "=" not in ls[:60]:
+            continue
+        om = _OPNAME_RE.search(ls)
+        path = om.group(1) if om else ""
+        mult = multiplier(path)
+
+        if " dot(" in ls:
+            dm = _DEF_RE.match(ls)
+            opm = re.search(r"dot\(([^)]*)\)", ls)
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ls)
+            if dm and opm:
+                out_t, out_d = dm.group(2), _parse_dims(dm.group(3))
+                out_elems = 1
+                for d in out_d:
+                    out_elems *= d
+                operands = [o.strip().lstrip("%") for o in opm.group(1).split(",")]
+                contract = 1
+                traffic = _nbytes(out_t, out_d)
+                lhs = symbols.get(operands[0]) if operands else None
+                if lhs and cm:
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs[1]):
+                            contract *= lhs[1][int(ci)]
+                for o in operands[:2]:
+                    if o in symbols:
+                        t, d = symbols[o]
+                        traffic += _nbytes(t, d)
+                stats.dot_flops += 2.0 * out_elems * max(contract, 1) * mult
+                stats.dot_traffic_bytes += traffic * mult
+                stats.n_dots += 1
+            continue
+
+        for cname in COLLECTIVES:
+            if f" {cname}(" in ls or f" {cname}-start(" in ls:
+                dm = _DEF_RE.match(ls)
+                if dm:
+                    nbytes = _nbytes(dm.group(2), _parse_dims(dm.group(3)))
+                    k = _group_size(ls, default_group)
+                    if cname == "all-reduce":
+                        factor = 2.0 * (k - 1) / max(k, 1)
+                    elif cname in ("all-gather", "reduce-scatter"):
+                        factor = (k - 1) / max(k, 1)
+                    else:
+                        factor = 1.0
+                    payload = nbytes * factor * mult
+                    counts[cname] += payload
+                    stats.collective_bytes += payload
+                break
+
+    stats.collective_counts = dict(counts)
+    return stats

@@ -1,0 +1,55 @@
+"""Serving launcher: continuous-batching LM decode on the current backend.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 16 --slots 4
+
+Uses the reduced same-family config on CPU (the full configs are proven
+via launch/dryrun.py decode cells); on a TPU pod the same engine runs the
+assigned config with the decode-cell shardings from launch/steps.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.lm_archs import smoke_lm
+from repro.models import transformer as tfm
+from repro.models.param import init_params
+from repro.serve.engine import LMEngine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = smoke_lm(moe=False)
+    params = init_params(jax.random.PRNGKey(0), tfm.param_specs(cfg))
+    engine = LMEngine(cfg, params, n_slots=args.slots, max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    backlog = [
+        Request(prompt=rng.integers(1, cfg.vocab, size=int(rng.integers(2, 10))),
+                max_new=args.max_new)
+        for _ in range(args.requests)
+    ]
+    done, ticks = [], 0
+    t0 = time.perf_counter()
+    while backlog or engine.n_live:
+        while backlog and engine.submit(backlog[0]):
+            backlog.pop(0)
+        done += engine.tick()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests / {tokens} tokens in {ticks} ticks "
+          f"({dt:.1f}s, {tokens/dt:.1f} tok/s on {jax.default_backend()})")
+
+
+if __name__ == "__main__":
+    main()

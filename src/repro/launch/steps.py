@@ -1,0 +1,352 @@
+"""Step builders: one jittable function + abstract inputs + in_shardings per
+(arch × shape × mesh) cell. This is where the logical-axis sharding system
+meets the model zoo; launch/dryrun.py lowers exactly what train.py/serve.py
+execute.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, input_specs
+from repro.models import gnn as gnn_lib
+from repro.models import sasrec as sas_lib
+from repro.models import transformer as tfm
+from repro.models.param import abstract_params, logical_axes, param_count
+from repro.sharding.rules import (
+    PROFILES,
+    filter_spec,
+    params_shardings,
+    shardings_for_axes,
+    spec_for,
+)
+from repro.train import optimizer as opt
+from repro.train.train_loop import TrainConfig, make_train_step
+
+
+@dataclass
+class BuiltStep:
+    fn: Callable  # jittable
+    abstract_args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    meta: dict  # roofline metadata (scan trip counts, model flops, ...)
+    out_shardings: Any = None  # None = let GSPMD choose
+    donate: tuple = ()  # donate_argnums (params/opt for train, cache for decode)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, filter_spec(P(*spec), mesh))
+
+
+def _shard_batch_dim(mesh, b: int):
+    """("pod","data") if it divides the batch, else replicated."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    extent = 1
+    for a in axes:
+        extent *= mesh.shape[a]
+    return axes if (b % extent == 0 and extent > 1) else None
+
+
+def _batch_shardings(mesh: Mesh, abstract: dict, leading_axes) -> dict:
+    out = {}
+    for k, v in abstract.items():
+        if v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            dim0 = leading_axes if (leading_axes and v.shape[0] % _extent(mesh, leading_axes) == 0) else None
+            out[k] = NamedSharding(mesh, P(dim0, *([None] * (v.ndim - 1))))
+    return out
+
+
+def _extent(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    e = 1
+    for a in axes:
+        e *= mesh.shape[a]
+    return e
+
+
+def _all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+# ------------------------------------------------------------------ LM cells
+
+def _lm_flops_meta(cfg: tfm.LMConfig, shape: ShapeSpec) -> dict:
+    """Analytic MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for fwd."""
+    d, l = cfg.d_model, cfg.n_layers
+    att = d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim \
+        + cfg.n_heads * cfg.head_dim * d
+    if cfg.moe is None:
+        mlp = 3 * d * cfg.d_ff
+    else:
+        m = cfg.moe
+        mlp = m.top_k * 3 * d * m.d_ff_expert + m.n_shared * 3 * d * m.d_ff_expert \
+            + d * m.n_experts
+    n_active = l * (att + mlp) + 2 * d * cfg.vocab_padded
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    # attention score flops (per token ~ 2·S·H·hd for scores+values)
+    s_eff = shape.seq_len
+    attn_extra = 2 * 2 * s_eff * cfg.n_heads * cfg.head_dim * (0.5 if shape.kind != "decode" else 1.0)
+    return {
+        "model_flops": float(mult * n_active * tokens + mult / 2 * attn_extra * tokens * l),
+        "n_params_active": float(n_active),
+        "scan_trip_count": l,
+        "tokens": tokens,
+    }
+
+
+def build_lm_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    from dataclasses import replace as _replace
+
+    cfg: tfm.LMConfig = arch.model
+    if shape.kind == "train" and arch.name == "kimi-k2-1t-a32b":
+        # 1T params: bf16 weights + 8-bit Adam (EXPERIMENTS §Perf)
+        cfg = _replace(cfg, param_dtype=jnp.bfloat16)
+    if shape.kind in ("prefill", "decode"):
+        # Serving weights are stored in the activation dtype: passing f32
+        # params and casting inside doubles residency (EXPERIMENTS §Perf).
+        cfg = _replace(cfg, param_dtype=cfg.act_dtype)
+    specs = tfm.param_specs(cfg)
+    aparams = abstract_params(specs)
+    p_shard = params_shardings(specs, arch.profile, mesh)
+
+    bdim = _shard_batch_dim(mesh, shape.global_batch)
+    # Sequence parallelism for train/prefill (MaxText-style activation
+    # partitioning): the scan carry is the dominant live tensor — sharding
+    # its seq dim over "model" cuts it 16× (yi-6b: 49→~4 GiB/dev, §Perf).
+    seq_ok = shape.kind in ("train", "prefill") and shape.seq_len % mesh.shape["model"] == 0
+    cons = tfm.Constraints(
+        activations=_ns(mesh, bdim, "model" if seq_ok else None, None),
+        logits=_ns(mesh, bdim, None, "model"),
+        kv_cache=_ns(mesh, None, bdim, "model", None, None),
+        # SP: gather seq once before attention; q heads shard over model
+        # where divisible, kv heads replicate (GQA)
+        attn_q=(
+            _ns(mesh, bdim, None, "model", None)
+            if cfg.n_heads % mesh.shape["model"] == 0
+            else _ns(mesh, bdim, None, None, None)
+        ) if seq_ok else None,
+        attn_kv=_ns(mesh, bdim, None, None, None) if seq_ok else None,
+        # MoE: expert-parallel shard_map path (layers.moe_mlp_shmap)
+        mesh=mesh if cfg.moe else None,
+        expert_axis="model",
+        token_axes=(bdim if isinstance(bdim, tuple) else (bdim,)) if bdim else (),
+    )
+    abstract_batch = input_specs(arch, shape)
+    b_shard = _batch_shardings(mesh, abstract_batch, bdim)
+    meta = _lm_flops_meta(cfg, shape)
+    meta["param_count"] = param_count(specs)
+
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        acfg = opt.AdamWConfig(state_bits=arch.opt_state_bits)
+        tcfg = TrainConfig(adamw=acfg, microbatch=arch.microbatch_train)
+        loss_fn = functools.partial(tfm.lm_loss, cfg, cons)
+        fn = make_train_step(loss_fn, tcfg)
+        aopt = opt.abstract_opt_state(aparams, acfg)
+        o_axes = opt.opt_logical_axes(logical_axes(specs), acfg)
+        o_shard = shardings_for_axes(aopt, o_axes, arch.profile, mesh)
+        m_shard = {"loss": rep, "grad_norm": rep}
+        return BuiltStep(fn, (aparams, aopt, abstract_batch),
+                         (p_shard, o_shard, b_shard), meta,
+                         out_shardings=(p_shard, o_shard, m_shard),
+                         donate=(0, 1))
+
+    if shape.kind == "prefill":
+        fn = tfm.make_prefill(cfg, cons)
+        return BuiltStep(fn, (aparams, abstract_batch), (p_shard, b_shard), meta,
+                         out_shardings=cons.logits)
+
+    # decode
+    fn = tfm.make_decode_step(cfg, cons)
+    acache = tfm.abstract_kv_cache(cfg, shape.global_batch, shape.seq_len)
+    c_shard = {k: cons.kv_cache for k in acache}
+    return BuiltStep(fn, (aparams, acache, abstract_batch),
+                     (p_shard, c_shard, b_shard), meta,
+                     out_shardings=(_ns(mesh, bdim, None, "model"), c_shard),
+                     donate=(1,))
+
+
+# ----------------------------------------------------------------- GNN cells
+
+def _gnn_flops_meta(cfg: gnn_lib.GNNConfig, shape: ShapeSpec) -> dict:
+    d = cfg.d_hidden
+    n, e = shape.n_nodes, shape.n_edges
+    if cfg.arch in ("meshgraphnet", "graphcast"):
+        per_layer = e * (3 * d * d + d * d) * 2 + n * (2 * d * d + d * d) * 2
+    elif cfg.arch == "gin":
+        per_layer = n * 2 * d * d * 2 + e * 2 * d
+    else:  # gat
+        per_layer = n * 2 * d * d + e * 8 * d
+    fwd = cfg.n_layers * per_layer + n * 2 * (shape.d_feat + shape.n_out) * d
+    return {
+        "model_flops": float(3 * fwd),  # train = fwd + 2×bwd
+        "scan_trip_count": cfg.n_layers,
+        "tokens": n,
+    }
+
+
+def build_gnn_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    cfg = arch.model_for(shape)
+    specs = gnn_lib.param_specs(cfg)
+    aparams = abstract_params(specs)
+    p_shard = params_shardings(specs, arch.profile, mesh)
+    node_axes = _all_axes(mesh)
+    constraint = _ns(mesh, node_axes, None)
+
+    acfg = opt.AdamWConfig()
+    tcfg = TrainConfig(adamw=acfg)
+    loss_fn = functools.partial(gnn_lib.gnn_loss, cfg, constraint=constraint)
+    fn = make_train_step(loss_fn, tcfg)
+    aopt = opt.abstract_opt_state(aparams, acfg)
+    o_axes = opt.opt_logical_axes(logical_axes(specs), acfg)
+    o_shard = shardings_for_axes(aopt, o_axes, arch.profile, mesh)
+
+    abstract_batch = input_specs(arch, shape)
+    b_shard = {}
+    for k, v in abstract_batch.items():
+        if v.ndim and v.shape[0] % _extent(mesh, node_axes) == 0:
+            b_shard[k] = _ns(mesh, node_axes, *([None] * (v.ndim - 1)))
+        elif v.ndim and v.shape[0] % _extent(mesh, _shard_batch_dim(mesh, v.shape[0]) or ()) == 0:
+            b_shard[k] = _ns(mesh, _shard_batch_dim(mesh, v.shape[0]), *([None] * (v.ndim - 1)))
+        else:
+            b_shard[k] = _ns(mesh)
+    meta = _gnn_flops_meta(cfg, shape)
+    meta["param_count"] = param_count(specs)
+    rep = NamedSharding(mesh, P())
+    return BuiltStep(fn, (aparams, aopt, abstract_batch),
+                     (p_shard, o_shard, b_shard), meta,
+                     out_shardings=(p_shard, o_shard, {"loss": rep, "grad_norm": rep}),
+                     donate=(0, 1))
+
+
+# -------------------------------------------------------------- recsys cells
+
+def build_recsys_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    cfg: sas_lib.SASRecConfig = arch.model
+    specs = sas_lib.param_specs(cfg)
+    aparams = abstract_params(specs)
+    p_shard = params_shardings(specs, arch.profile, mesh)
+    bdim = _shard_batch_dim(mesh, shape.global_batch)
+    act = _ns(mesh, bdim, None, None)
+    abstract_batch = input_specs(arch, shape)
+    b_shard = _batch_shardings(mesh, abstract_batch, bdim)
+
+    d, s, v = cfg.embed_dim, cfg.seq_len, cfg.n_items
+    b = shape.global_batch
+    enc_flops = b * s * (4 * d * d + 2 * d * d + 2 * s * d) * cfg.n_blocks
+    meta = {"scan_trip_count": cfg.n_blocks, "param_count": param_count(specs), "tokens": b * s}
+
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        acfg = opt.AdamWConfig()
+        tcfg = TrainConfig(adamw=acfg)
+        loss_fn = functools.partial(sas_lib.sasrec_loss, cfg, constraint=act)
+        fn = make_train_step(loss_fn, tcfg)
+        aopt = opt.abstract_opt_state(aparams, acfg)
+        o_axes = opt.opt_logical_axes(logical_axes(specs), acfg)
+        o_shard = shardings_for_axes(aopt, o_axes, arch.profile, mesh)
+        meta["model_flops"] = float(3 * (enc_flops + b * s * 2 * 2 * d))
+        return BuiltStep(fn, (aparams, aopt, abstract_batch),
+                         (p_shard, o_shard, b_shard), meta,
+                         out_shardings=(p_shard, o_shard, {"loss": rep, "grad_norm": rep}),
+                         donate=(0, 1))
+    if shape.kind == "serve":
+        logits_c = _ns(mesh, bdim, "model")
+        fn = sas_lib.make_serve_step(cfg, constraint=act, logits_constraint=logits_c)
+        meta["model_flops"] = float(enc_flops + b * 2 * d * v)
+        return BuiltStep(fn, (aparams, abstract_batch), (p_shard, b_shard), meta,
+                         out_shardings=logits_c)
+    # retrieval
+    fn = sas_lib.make_retrieval_step(cfg, constraint=act)
+    c = shape.n_candidates
+    b_shard["candidates"] = _ns(mesh, _all_axes(mesh))
+    meta["model_flops"] = float(enc_flops + 2 * d * c)
+    return BuiltStep(fn, (aparams, abstract_batch), (p_shard, b_shard), meta,
+                     out_shardings=_ns(mesh, _all_axes(mesh)))
+
+
+# ----------------------------------------------------------------- BGV cells
+
+def build_bgv_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    """The paper's pipeline, distributed: see configs/biggraphvis.py."""
+    import repro.core.cms as cms_lib
+    from repro.core import forceatlas2 as fa2
+    from repro.core.scoda import _block_update
+
+    n, e = shape.n_nodes, shape.n_edges
+    all_ax = _all_axes(mesh)
+    edge_shard = _ns(mesh, all_ax, None)
+    node_rep = _ns(mesh)  # labels/degrees replicated (all-reduce merged)
+
+    if shape.kind == "bgv_detect":
+        cms_cfg = cms_lib.CMSConfig(rows=4, cols=shape.n_out)
+
+        def detect_step(com, deg, edges):
+            # One streaming round over the device-sharded edge list: each
+            # device's scatter lands in the replicated (com, deg) arrays —
+            # XLA merges with all-reduce-min / all-reduce-add, the TPU
+            # equivalent of the paper's atomics (DESIGN.md §2).
+            (com, deg), _ = _block_update(
+                (com, deg), edges, threshold=16, tie_break="join",
+                degree_update="scoda", exact_block_degrees=False,
+                conflict="min", propagate_jumps=0,
+            )
+            sketch = cms_lib.init_sketch(cms_cfg)
+            sketch = cms_lib.update(sketch, com[:-1], deg[:-1].astype(jnp.float32), cms_cfg)
+            return com, deg, sketch
+
+        abstract = (
+            jax.ShapeDtypeStruct((n + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((n + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((e, 2), jnp.int32),
+        )
+        shards = (node_rep, node_rep, edge_shard)
+        meta = {"model_flops": float(30 * e), "scan_trip_count": 1, "tokens": e}
+        return BuiltStep(detect_step, abstract, shards, meta,
+                         out_shardings=(node_rep, node_rep, node_rep))
+
+    # bgv_layout: one FA2 iteration on the supergraph, node tiles sharded.
+    cfg = fa2.FA2Config(iterations=1, use_radii=True)
+
+    def layout_step(pos, prev_f, mass, radii, edges, weights):
+        state = (pos, prev_f, jnp.float32(1.0))
+        (pos, f, _), _ = fa2.step(state, edges, weights, mass, radii, cfg, n)
+        return pos, f
+
+    abstract = (
+        jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((e, 2), jnp.int32),
+        jax.ShapeDtypeStruct((e,), jnp.float32),
+    )
+    node_shard = _ns(mesh, all_ax, None)
+    vec_shard = _ns(mesh, all_ax)
+    shards = (node_shard, node_shard, vec_shard, vec_shard, edge_shard, vec_shard)
+    meta = {"model_flops": float(10.0 * n * n + 20 * e), "scan_trip_count": 1, "tokens": n}
+    return BuiltStep(layout_step, abstract, shards, meta,
+                     out_shardings=(node_shard, node_shard))
+
+
+def build_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    if arch.family == "lm":
+        return build_lm_step(arch, shape, mesh)
+    if arch.family == "gnn":
+        return build_gnn_step(arch, shape, mesh)
+    if arch.family == "recsys":
+        return build_recsys_step(arch, shape, mesh)
+    if arch.family == "bgv":
+        return build_bgv_step(arch, shape, mesh)
+    raise ValueError(arch.family)

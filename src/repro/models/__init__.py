@@ -1,0 +1,3 @@
+"""Architecture zoo: LM transformers (dense / MoE / GQA / sliding-window),
+GNNs (GIN, GAT, MeshGraphNet, GraphCast) and SASRec, all defined through
+the logical-axis param system in param.py."""

@@ -1,0 +1,82 @@
+"""Minimal parameter system with logical sharding axes (t5x/MaxText style).
+
+A model is a function ``config → {name: ParamSpec}`` (nested dicts allowed).
+Each ParamSpec carries *logical* axis names ("embed", "heads", "expert",
+"vocab", ...). sharding/rules.py maps logical axes → mesh axes per arch, so
+the same model code runs on any mesh.
+
+No flax dependency: params are plain pytrees of jnp arrays; the spec tree
+is the single source of truth for shapes, init and sharding.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    dtype: Any = jnp.float32
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (self.shape, self.logical_axes)
+
+
+def _init_one(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "scaled":  # fan-in scaled normal
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape) * scale).astype(spec.dtype)
+    return (jax.random.normal(key, spec.shape) * spec.init_scale).astype(spec.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key: jax.Array, specs) -> Any:
+    """Materialize a spec tree into a param pytree (host-sequential PRNG split)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec
+    )
+
+
+def logical_axes(specs) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.logical_axes, specs, is_leaf=is_spec)
+
+
+def cast_floats(tree, dtype):
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            if isinstance(x, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct(x.shape, dtype, sharding=x.sharding)
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(cast, tree)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)

@@ -1,0 +1,121 @@
+"""SASRec (Kang & McAuley 2018): self-attentive sequential recommendation.
+
+Huge sparse item-embedding table → causal 1-head self-attention over the
+user's last-S interactions → next-item scoring against the (shared) table.
+JAX has no nn.EmbeddingBag: the lookup is ``jnp.take`` and bulk scoring is
+a [B, D]·[D, V] matmul against the vocab-sharded table (assignment §RecSys).
+
+Steps lowered per shape cell:
+  train_batch     → train_step (BCE, 1 positive + 1 sampled negative/pos)
+  serve_p99/bulk  → serve_step (score all V items for the last position)
+  retrieval_cand  → retrieval_step (1 user × 1M candidate dot scores)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+
+
+@dataclass(frozen=True)
+class SASRecConfig:
+    name: str
+    n_items: int
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    act_dtype: Any = jnp.float32
+
+
+def param_specs(cfg: SASRecConfig) -> dict:
+    l, d = cfg.n_blocks, cfg.embed_dim
+    dt = jnp.float32
+    return {
+        # item 0 is the padding item (classic SASRec convention)
+        "item_embed": ParamSpec((cfg.n_items, d), ("vocab", "embed"), "normal", dt),
+        "pos_embed": ParamSpec((cfg.seq_len, d), (None, "embed"), "normal", dt),
+        "final_norm": ParamSpec((d,), ("embed",), "zeros", dt),
+        "layers": {
+            "attn_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
+            "wq": ParamSpec((l, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wk": ParamSpec((l, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wv": ParamSpec((l, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wo": ParamSpec((l, cfg.n_heads, d // cfg.n_heads, d), ("layer", "heads", "head_dim", "embed"), "scaled", dt),
+            "ffn_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
+            "w1": ParamSpec((l, d, d), ("layer", "embed", "mlp"), "scaled", dt),
+            "b1": ParamSpec((l, d), ("layer", "mlp"), "zeros", dt),
+            "w2": ParamSpec((l, d, d), ("layer", "mlp", "embed"), "scaled", dt),
+            "b2": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
+        },
+    }
+
+
+def encode(cfg: SASRecConfig, params, seq, constraint=None):
+    """seq [B, S] item ids (0 = pad) → user states [B, S, D]."""
+    b, s = seq.shape
+    cstr = (lambda x: jax.lax.with_sharding_constraint(x, constraint)) if constraint is not None else (lambda x: x)
+    x = params["item_embed"].astype(cfg.act_dtype)[seq] * (cfg.embed_dim ** 0.5)
+    x = x + params["pos_embed"].astype(cfg.act_dtype)[None, :s]
+    x = jnp.where((seq > 0)[..., None], x, 0.0)
+    x = cstr(x)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, lp):
+        hN = L.rms_norm(x, lp["attn_norm"])
+        q = jnp.einsum("bsd,dhk->bshk", hN, lp["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", hN, lp["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", hN, lp["wv"].astype(x.dtype))
+        att = L.gqa_attention(q, k, v, positions, positions, causal=True)
+        x = x + jnp.einsum("bshk,hkd->bsd", att, lp["wo"].astype(x.dtype))
+        hN = L.rms_norm(x, lp["ffn_norm"])
+        y = jax.nn.relu(jnp.einsum("bsd,df->bsf", hN, lp["w1"].astype(x.dtype)) + lp["b1"].astype(x.dtype))
+        y = jnp.einsum("bsf,fd->bsd", y, lp["w2"].astype(x.dtype)) + lp["b2"].astype(x.dtype)
+        return cstr(x + y), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"])
+
+
+def sasrec_loss(cfg: SASRecConfig, params, batch, constraint=None):
+    """Paper objective: BCE on (h_t · e_pos) vs (h_t · e_neg) per position."""
+    seq, pos, neg = batch["seq"], batch["pos"], batch["neg"]  # [B, S] each
+    h = encode(cfg, params, seq, constraint)
+    te = params["item_embed"].astype(h.dtype)
+    pe, ne = te[pos], te[neg]
+    sp = jnp.sum(h * pe, -1).astype(jnp.float32)
+    sn = jnp.sum(h * ne, -1).astype(jnp.float32)
+    mask = (pos > 0).astype(jnp.float32)
+    loss = -(jax.nn.log_sigmoid(sp) + jax.nn.log_sigmoid(-sn)) * mask
+    return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_serve_step(cfg: SASRecConfig, constraint=None, logits_constraint=None):
+    """seq [B, S] → scores [B, n_items] for the next interaction."""
+
+    def serve_step(params, batch):
+        h = encode(cfg, params, batch["seq"], constraint)[:, -1]  # [B, D]
+        scores = jnp.einsum("bd,vd->bv", h, params["item_embed"].astype(h.dtype))
+        if logits_constraint is not None:
+            scores = jax.lax.with_sharding_constraint(scores, logits_constraint)
+        return scores
+
+    return serve_step
+
+
+def make_retrieval_step(cfg: SASRecConfig, constraint=None):
+    """One user sequence × [C] candidate ids → [C] scores (batched dot,
+    not a loop — assignment §RecSys)."""
+
+    def retrieval_step(params, batch):
+        h = encode(cfg, params, batch["seq"], constraint)[:, -1]  # [1, D]
+        cand = params["item_embed"].astype(h.dtype)[batch["candidates"]]  # [C, D]
+        return jnp.einsum("bd,cd->bc", h, cand)[0]
+
+    return retrieval_step

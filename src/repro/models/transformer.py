@@ -1,0 +1,331 @@
+"""LM transformer family: dense (Yi, Mistral-Large, Gemma3) and MoE
+(Kimi-K2, Granite) with GQA, RoPE, SwiGLU, optional sliding-window layers
+(Gemma3 5:1 local:global), scan-over-layers, chunked prefill, and a
+sequence-sharded KV cache decode path.
+
+Design notes
+  * scan-over-layers keeps the HLO (and compile time) O(1) in depth —
+    layer params are stacked with a leading "layer" logical axis.
+  * activation sharding constraints are injected by the launcher via
+    ``Constraints`` (the model is mesh-agnostic).
+  * the only static knobs are in LMConfig; every (arch × shape) cell of
+    the assignment lowers through make_train_step / make_prefill /
+    make_decode_step below.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.param import ParamSpec, cast_floats
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    vocab_padded: int  # padded to mesh divisibility (DESIGN.md §8)
+    moe: MoESpec | None = None
+    sliding_window: int | None = None  # window size for local layers
+    global_every: int = 0  # gemma3: every 6th layer is global (5:1)
+    rope_theta: float = 10000.0
+    act_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    q_chunk: int = 1024  # chunked prefill threshold/chunk
+
+
+@dataclass(frozen=True)
+class Constraints:
+    """Optional NamedShardings injected by the launcher."""
+    activations: Any = None  # [B, S, D]
+    logits: Any = None  # [B, S, V]
+    kv_cache: Any = None  # [L, B, S, KV, hd]
+    # Sequence parallelism discipline: q/k/v are all-gathered ONCE here
+    # (seq replicated) before attention; the residual constraint above
+    # reduce-scatters after. Without this the q-chunk scan re-gathers
+    # seq-sharded q/k/v per chunk per layer (yi-6b prefill: 982 GiB of
+    # all-gather per device — EXPERIMENTS §Perf iteration 8). Q shards its
+    # heads over "model" where divisible; K/V heads (4–8 GQA groups) are
+    # replicated — every query group needs all of them anyway.
+    attn_q: Any = None  # [B, S, H, hd]
+    attn_kv: Any = None  # [B, S, KV, hd]
+    moe_buf: Any = None  # [E, C, D] expert dispatch buffer (global-path only)
+    # shard_map expert parallelism (layers.moe_mlp_shmap); None = global path
+    mesh: Any = None
+    expert_axis: str = "model"
+    token_axes: tuple = ()
+
+
+def _c(x, s):
+    return jax.lax.with_sharding_constraint(x, s) if s is not None else x
+
+
+# ------------------------------------------------------------------- params
+
+def param_specs(cfg: LMConfig) -> dict:
+    l, d, h, kv, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.param_dtype
+    specs = {
+        "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"), "normal", dt),
+        "final_norm": ParamSpec((d,), ("embed",), "zeros", dt),
+        "unembed": ParamSpec((d, cfg.vocab_padded), ("embed", "vocab"), "scaled", dt),
+        "layers": {
+            "attn_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
+            "mlp_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
+            "wq": ParamSpec((l, d, h, hd), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wk": ParamSpec((l, d, kv, hd), ("layer", "embed", "kv_heads", "head_dim"), "scaled", dt),
+            "wv": ParamSpec((l, d, kv, hd), ("layer", "embed", "kv_heads", "head_dim"), "scaled", dt),
+            "wo": ParamSpec((l, h, hd, d), ("layer", "heads", "head_dim", "embed"), "scaled", dt),
+        },
+    }
+    lyr = specs["layers"]
+    if cfg.moe is None:
+        lyr["wi"] = ParamSpec((l, d, cfg.d_ff), ("layer", "embed", "mlp"), "scaled", dt)
+        lyr["wg"] = ParamSpec((l, d, cfg.d_ff), ("layer", "embed", "mlp"), "scaled", dt)
+        lyr["wo_mlp"] = ParamSpec((l, cfg.d_ff, d), ("layer", "mlp", "embed"), "scaled", dt)
+    else:
+        m = cfg.moe
+        lyr["router"] = ParamSpec((l, d, m.n_experts), ("layer", "embed", "expert"), "scaled", dt)
+        lyr["we_g"] = ParamSpec((l, m.n_experts, d, m.d_ff_expert), ("layer", "expert", "embed", "mlp"), "scaled", dt)
+        lyr["we_i"] = ParamSpec((l, m.n_experts, d, m.d_ff_expert), ("layer", "expert", "embed", "mlp"), "scaled", dt)
+        lyr["we_o"] = ParamSpec((l, m.n_experts, m.d_ff_expert, d), ("layer", "expert", "mlp", "embed"), "scaled", dt)
+        if m.n_shared:
+            f_sh = m.d_ff_expert * m.n_shared
+            lyr["ws_g"] = ParamSpec((l, d, f_sh), ("layer", "embed", "mlp"), "scaled", dt)
+            lyr["ws_i"] = ParamSpec((l, d, f_sh), ("layer", "embed", "mlp"), "scaled", dt)
+            lyr["ws_o"] = ParamSpec((l, f_sh, d), ("layer", "mlp", "embed"), "scaled", dt)
+    return specs
+
+
+def _is_global_layer(cfg: LMConfig, idx):
+    """Gemma3 pattern: layers (global_every-1, 2·global_every-1, …) are global."""
+    if cfg.sliding_window is None or cfg.global_every == 0:
+        return jnp.ones_like(idx, dtype=bool)
+    return (idx + 1) % cfg.global_every == 0
+
+
+# ------------------------------------------------------------------ forward
+
+def _layer(cfg: LMConfig, cons: Constraints, x, lp, layer_idx, positions,
+           kv_positions=None, kv_cache=None, cur_len=None, capacity=None):
+    """One transformer block. If kv_cache is given (decode), returns the
+    updated (k, v) slices; else runs self-attention over x."""
+    b, s, d = x.shape
+    h = rms = L.rms_norm(x, lp["attn_norm"])
+    q = jnp.einsum("bsd,dhk->bshk", rms, lp["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", rms, lp["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", rms, lp["wv"].astype(x.dtype))
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    q = _c(q, cons.attn_q)
+    k = _c(k, cons.attn_kv)
+    v = _c(v, cons.attn_kv)
+
+    is_global = _is_global_layer(cfg, layer_idx)
+    window = cfg.sliding_window
+    new_kv = None
+    if kv_cache is not None:
+        ck, cv = kv_cache  # [B, S_max, KV, hd] — stays at KV heads
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cur_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cur_len, 0, 0))
+        new_kv = (ck, cv)
+        k_att, v_att = ck, cv
+        kv_pos = kv_positions  # [B, S_max]
+        valid = jnp.full((b,), cur_len + s, jnp.int32)
+    else:
+        # train/prefill: expand K/V to flat heads (sharding-clean path,
+        # see layers._attend_flat) and re-constrain like q
+        g = cfg.n_heads // cfg.n_kv_heads
+        k_att = _c(L.expand_kv(k, g), cons.attn_q)
+        v_att = _c(L.expand_kv(v, g), cons.attn_q)
+        kv_pos = positions
+        valid = None
+
+    if window is not None:
+        # Banded mask on local layers, full on global layers: widen the
+        # window to "infinity" when the layer is global (traced select).
+        eff_window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(window))
+    else:
+        eff_window = None
+
+    out = L.gqa_attention(
+        q, k_att.astype(x.dtype), v_att.astype(x.dtype), positions, kv_pos,
+        causal=True, window=eff_window, kv_valid_len=valid,
+        q_chunk=cfg.q_chunk,
+    )
+    x = x + jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(x.dtype))
+    x = _c(x, cons.activations)
+
+    rms = L.rms_norm(x, lp["mlp_norm"])
+    aux = 0.0
+    if cfg.moe is None:
+        y = L.glu_mlp(rms, lp["wi"], lp["wg"], lp["wo_mlp"])
+    else:
+        m = cfg.moe
+        shared = (lp["ws_g"], lp["ws_i"], lp["ws_o"]) if m.n_shared else None
+        if cons.mesh is not None:
+            # Expert-parallel shard_map path (production): tokens stay on
+            # their data shard; one psum per layer. DESIGN.md §4.
+            y, aux = L.moe_mlp_shmap(
+                rms, lp["router"], lp["we_g"], lp["we_i"], lp["we_o"],
+                top_k=m.top_k, capacity_local=capacity, mesh=cons.mesh,
+                expert_axis=cons.expert_axis, token_axes=cons.token_axes,
+            )
+            if shared is not None:  # dense shared expert via plain GSPMD
+                y = y + L.glu_mlp(rms, shared[1], shared[0], shared[2])
+        else:
+            y, aux = L.moe_mlp(
+                rms, lp["router"], lp["we_g"], lp["we_i"], lp["we_o"],
+                top_k=m.top_k, capacity=capacity, shared=shared,
+                buf_constraint=cons.moe_buf,
+            )
+    x = _c(x + y, cons.activations)
+    return x, new_kv, aux
+
+
+def _moe_capacity(cfg: LMConfig, cons: Constraints, tokens_global: int) -> int | None:
+    """Per-expert capacity. With the shard_map path this is the *local*
+    capacity (tokens on one data shard, experts on one model shard)."""
+    if cfg.moe is None:
+        return None
+    m = cfg.moe
+    tokens = tokens_global
+    if cons.mesh is not None:
+        ext = 1
+        for a in cons.token_axes:
+            if a in cons.mesh.shape:
+                ext *= cons.mesh.shape[a]
+        tokens = max(1, tokens_global // ext)
+    cap = int(m.top_k * tokens / m.n_experts * m.capacity_factor)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def forward(cfg: LMConfig, cons: Constraints, params, tokens, positions):
+    """tokens [B, S] → logits [B, S, vocab_padded]. Used by train + prefill."""
+    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    x = _c(x, cons.activations)
+    capacity = _moe_capacity(cfg, cons, tokens.shape[0] * tokens.shape[1])
+    # Cast the stacked layer params ONCE, before the scan: the ZeRO-3
+    # weight all-gather inside the layer loop then moves bf16, not f32 —
+    # halving the dominant collective of the f32-param train cells
+    # (EXPERIMENTS §Perf iteration 9).
+    params = dict(params, layers=cast_floats(params["layers"], cfg.act_dtype))
+
+    def body(carry, scan_in):
+        x, aux_acc = carry
+        lp, idx = scan_in
+        x, _, aux = _layer(cfg, cons, x, lp, idx, positions, capacity=capacity)
+        return (x, aux_acc + aux), None
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), (params["layers"], idxs))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return _c(logits, cons.logits), aux
+
+
+def lm_loss(cfg: LMConfig, cons: Constraints, params, batch):
+    """Causal next-token cross-entropy with vocab padding masked out."""
+    tokens, loss_mask = batch["tokens"], batch["loss_mask"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    logits, aux = forward(cfg, cons, params, tokens, positions)
+    logits = logits.astype(jnp.float32)
+    # Mask padded vocab slots out of the partition function.
+    vmask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+    logits = jnp.where(vmask[None, None, :], logits, jnp.finfo(jnp.float32).min)
+    targets = jnp.roll(tokens, -1, axis=1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # Vocab-parallel gold extraction: take_along_axis over a vocab-sharded
+    # logits tensor makes XLA all-gather the full [B,S,V] per device
+    # (measured: gemma3 train_4k 137 GiB/dev — EXPERIMENTS §Perf). The
+    # iota-match form stays elementwise in the sharded vocab dim and
+    # reduces locally + one small all-reduce.
+    viota = jnp.arange(cfg.vocab_padded, dtype=jnp.int32)  # 1-D: fusable
+    gold = jnp.sum(
+        jnp.where(viota[None, None, :] == targets[..., None], logits, 0.0), axis=-1
+    )
+    nll = (logz - gold) * loss_mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return loss + 0.01 * aux
+
+
+def make_prefill(cfg: LMConfig, cons: Constraints = Constraints()):
+    """tokens [B, S] → logits (inference prefill, no loss)."""
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        params_c = cast_floats(params, cfg.act_dtype)
+        logits, _ = forward(cfg, cons, params_c, tokens, positions)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: LMConfig, cons: Constraints = Constraints()):
+    """serve_step: one new token against an [L, B, S_max, KV, hd] KV cache."""
+
+    def decode_step(params, cache, batch):
+        tokens, cur_len = batch["tokens"], batch["cur_len"]  # [B,1], scalar int32
+        b, s = tokens.shape
+        s_max = cache["k"].shape[2]
+        positions = jnp.broadcast_to(cur_len[None, None], (b, s)).astype(jnp.int32)
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(s_max, dtype=jnp.int32)[None], (b, s_max)
+        )
+        params_c = cast_floats(params, cfg.act_dtype)
+        x = params_c["embed"].astype(cfg.act_dtype)[tokens]
+        capacity = _moe_capacity(cfg, cons, b * s)
+
+        def body(carry, scan_in):
+            x = carry
+            lp, idx, ck, cv = scan_in
+            x, new_kv, _ = _layer(
+                cfg, cons, x, lp, idx, positions,
+                kv_positions=kv_positions, kv_cache=(ck, cv), cur_len=cur_len,
+                capacity=capacity,
+            )
+            return x, new_kv
+
+        idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params_c["layers"], idxs, cache["k"], cache["v"])
+        )
+        x = L.rms_norm(x, params_c["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", x, params_c["unembed"].astype(x.dtype))
+        nk = _c(nk, cons.kv_cache)
+        nv = _c(nv, cons.kv_cache)
+        return logits, {"k": nk, "v": nv}
+
+    return decode_step
+
+
+def abstract_kv_cache(cfg: LMConfig, batch: int, s_max: int):
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.act_dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.act_dtype),
+    }

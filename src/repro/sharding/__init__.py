@@ -1,0 +1,7 @@
+from repro.sharding.rules import (
+    PROFILES,
+    spec_for,
+    filter_spec,
+    params_shardings,
+    batch_sharding,
+)

@@ -1,0 +1,234 @@
+"""AdamW from scratch (no optax in this environment) with optional
+blockwise-8-bit state quantization (Dettmers-style) — the distributed-
+optimization trick that lets the 1T-param kimi-k2 cell fit 512×16 GB
+(see EXPERIMENTS.md §Perf): m,v stored as int8 + f32 per-block scales
+= 2.5 bytes/param of optimizer state instead of 8.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Q_BLOCK = 256
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    # 32: f32 m,v (classic AdamW). 8: int8 row-wise momentum + FACTORED
+    # second moment (Adafactor-style row/col statistics). Straight int8 v
+    # diverges — small second moments quantize to zero and updates explode
+    # (tests/test_train_substrate.py); factored v is the production answer
+    # at 1T scale (T5/PaLM lineage) and costs ~0 memory.
+    state_bits: int = 32
+    grad_clip: float = 1.0
+
+
+# ------------------------------------------------- row-wise int8 quantizer
+#
+# One scale per last-dim row: q keeps the param's EXACT shape (and hence
+# its logical sharding axes — essential for the 1T-param cells), the scale
+# drops the last dim. An earlier block-of-256 layout reshaped the last dim
+# and silently lost its sharding: kimi's we_o [L,E,F,D(embed→data)] state
+# became unsharded ⇒ 20 GiB int8 + an s8 all-gather + 20 GiB f32 dequant
+# per device (EXPERIMENTS §Perf iteration 6). Row-wise is coarser than
+# Dettmers' 256-blocks but sharding-transparent; Adam tolerates it (see
+# tests/test_train_substrate.py::test_adamw_int8_tracks_fp32).
+
+def _q8(x: jnp.ndarray):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape):
+    return (q.astype(jnp.float32) * scale).reshape(shape)
+
+
+def _quant_state(x, bits):
+    if bits == 8:
+        q, s = _q8(x)
+        return {"q": q, "s": s}
+    return x.astype(jnp.float32)
+
+
+def _dequant_state(st, shape, bits):
+    if bits == 8:
+        return _dq8(st["q"], st["s"], shape)
+    return st
+
+
+def _abstract_q8(shape, dtype=jnp.float32):
+    ss = tuple(shape[:-1]) + (1,) if shape else (1,)
+    return {
+        "q": jax.ShapeDtypeStruct(tuple(shape), jnp.int8),
+        "s": jax.ShapeDtypeStruct(ss, jnp.float32),
+    }
+
+
+def opt_logical_axes(param_axes_tree, cfg: "AdamWConfig"):
+    """Logical axes for the optimizer state, mirroring the param axes.
+
+    f32 state: same axes as the param. int8 state: leading axes preserved,
+    block dims unsharded."""
+
+    def one(axes):
+        if cfg.state_bits == 8:
+            # Row-wise layout: q shares the param's shape AND axes; the
+            # scale keeps all axes but the (reduced) last one.
+            q_axes = tuple(axes)
+            s_axes = (tuple(axes[:-1]) + (None,)) if axes else (None,)
+            m = {"q": q_axes, "s": s_axes}
+            if len(axes) >= 2:
+                v = {"r": tuple(axes[:-1]), "c": tuple(axes[:-2]) + (axes[-1],)}
+            else:
+                v = axes
+            return {"m": m, "v": v}
+        return {"m": axes, "v": axes}
+
+    return {
+        "count": (),
+        "mv": jax.tree_util.tree_map(
+            one, param_axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+        ),
+    }
+
+
+# ----------------------------------------------------------------- adamw
+
+# ------------------------------------------ factored second moment (v)
+
+def _vrow_vcol_shapes(shape):
+    """Factored v: row stats reduce the last dim, col stats the 2nd-to-last."""
+    vr = tuple(shape[:-1])
+    vc = tuple(shape[:-2]) + (shape[-1],)
+    return vr, vc
+
+
+def _factored_ok(shape) -> bool:
+    return len(shape) >= 2
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    def one(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.state_bits == 8:
+            if _factored_ok(p.shape):
+                vr, vc = _vrow_vcol_shapes(p.shape)
+                v = {"r": jnp.zeros(vr, jnp.float32), "c": jnp.zeros(vc, jnp.float32)}
+            else:
+                v = jnp.zeros(p.shape, jnp.float32)
+            return {"m": _quant_state(z, 8), "v": v}
+        return {"m": z, "v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "count": jnp.zeros((), jnp.int32),
+        "mv": jax.tree_util.tree_map(one, params),
+    }
+
+
+def abstract_opt_state(abstract_params, cfg: AdamWConfig):
+    """ShapeDtypeStruct tree matching init_opt_state — for the dry-run."""
+    def one(p):
+        if cfg.state_bits == 8:
+            if _factored_ok(p.shape):
+                vr, vc = _vrow_vcol_shapes(p.shape)
+                v = {"r": jax.ShapeDtypeStruct(vr, jnp.float32),
+                     "c": jax.ShapeDtypeStruct(vc, jnp.float32)}
+            else:
+                v = jax.ShapeDtypeStruct(p.shape, jnp.float32)
+            return {"m": _abstract_q8(p.shape), "v": v}
+        return {
+            "m": jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            "v": jax.ShapeDtypeStruct(p.shape, jnp.float32),
+        }
+
+    return {
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+        "mv": jax.tree_util.tree_map(one, abstract_params),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def one(p, g, mv):
+        g = g.astype(jnp.float32) * clip
+        m = _dequant_state(mv["m"], p.shape, cfg.state_bits)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        if cfg.state_bits == 8 and _factored_ok(p.shape):
+            g2 = g * g + 1e-30
+            vr = cfg.b2 * mv["v"]["r"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            vc = cfg.b2 * mv["v"]["c"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            # V ≈ (vr ⊗ vc) / mean(vr): the Adafactor rank-1 reconstruction
+            denom = jnp.mean(vr, axis=-1, keepdims=True)[..., None] + 1e-30
+            v_hat = (vr[..., None] * vc[..., None, :]) / denom
+            new_v = {"r": vr, "c": vc}
+        else:
+            v = mv["v"] if cfg.state_bits != 8 else mv["v"]
+            v = cfg.b2 * v + (1 - cfg.b2) * g * g
+            v_hat = v
+            new_v = v
+        update = (m / b1c) / (jnp.sqrt(v_hat / b2c) + cfg.eps)
+        new_p = p.astype(jnp.float32) - cfg.lr * (update + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), {
+            "m": _quant_state(m, cfg.state_bits),
+            "v": new_v,
+        }
+
+    # Liveness discipline: without explicit sequencing XLA schedules every
+    # tensor's f32 dequant→update chain concurrently (kimi train_4k:
+    # ~61 GiB of simultaneous 5 GiB f32 temporaries). An
+    # optimization_barrier token threads each tensor's update after the
+    # previous one, so one chain is live at a time. (A lax.map over the
+    # layer dim was tried first and REFUTED: scan double-buffers the
+    # stacked xs/ys and lost 3–7 GiB — EXPERIMENTS §Perf iteration 7.)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mv = treedef.flatten_up_to(state["mv"])
+    # Sequence the big updates: before starting tensor j, its gradient is
+    # passed through one optimization_barrier together with tensor i's
+    # finished outputs — a pure ordering edge (no arithmetic, shapes and
+    # shardings preserved). First attempt used a fake scalar dependency
+    # built from ravel()[0]; the reshape of a sharded tensor replicated
+    # every parameter (1383 GiB/dev — refuted, EXPERIMENTS §Perf it. 7b).
+    BIG = 64 * 2**20
+    order = sorted(range(len(flat_p)), key=lambda i: -flat_p[i].size)
+    out: list = [None] * len(flat_p)
+    pending_idx: int | None = None
+    pending = None
+    for i in order:
+        p, g, mv = flat_p[i], flat_g[i], flat_mv[i]
+        big = p.size * 4 >= BIG
+        if big and pending is not None:
+            g, pending = jax.lax.optimization_barrier((g, pending))
+            out[pending_idx] = pending
+        new_out = one(p, g, mv)
+        if big:
+            pending, pending_idx = new_out, i
+        else:
+            out[i] = new_out
+    if pending is not None:
+        out[pending_idx] = pending
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mv = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"count": count, "mv": new_mv}, {"grad_norm": gnorm}

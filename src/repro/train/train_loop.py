@@ -1,0 +1,90 @@
+"""Train-step factories (loss → grad → AdamW) shared by every family,
+with microbatch gradient accumulation, optional gradient compression for
+the DP all-reduce, and a step-time watchdog for straggler detection.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt
+from repro.train.compression import compress_decompress
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = opt.AdamWConfig()
+    microbatch: int = 0  # 0 = no accumulation; else split batch dim
+    compress_grads: bool = False  # int8 gradient compression (error-feedback-free)
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig):
+    """loss_fn(params, batch) → scalar. Returns train_step(params, state,
+    batch) → (params, state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def train_step(params, state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            n = tcfg.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, b_i):
+                loss_acc, g_acc = carry
+                loss, g = grads_of(params, b_i)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            # Accumulate in the PARAM dtype: an f32 accumulator for a
+            # bf16-param 1T model costs 2× the grads themselves.
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params
+            )
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), mb)
+            loss = loss / n
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+
+        if tcfg.compress_grads:
+            grads = jax.tree_util.tree_map(compress_decompress, grads)
+
+        params, state, metrics = opt.apply_updates(params, grads, state, tcfg.adamw)
+        metrics["loss"] = loss
+        return params, state, metrics
+
+    return train_step
+
+
+class StepWatchdog:
+    """Host-side straggler detector: flags steps slower than
+    ``threshold ×`` the running median. At pod scale the launcher uses this
+    to trigger checkpoint-and-reschedule (see fault_tolerance.py)."""
+
+    def __init__(self, threshold: float = 3.0, warmup: int = 3):
+        self.threshold = threshold
+        self.warmup = warmup
+        self.durations: list[float] = []
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        dt = time.perf_counter() - self._t0
+        self.durations.append(dt)
+        if len(self.durations) <= self.warmup:
+            return False
+        med = sorted(self.durations[:-1])[len(self.durations[:-1]) // 2]
+        return dt > self.threshold * med

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests are documented to run with PYTHONPATH=src; this makes them robust
+# without it. Do NOT set XLA_FLAGS here — smoke tests must see 1 device;
+# only launch/dryrun.py forces 512 host devices (and runs out-of-process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,259 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward/train step on CPU, asserting output shapes + no NaNs.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, get_config
+from repro.configs.base import input_specs
+from repro.configs.gnn_archs import smoke_gnn
+from repro.configs.lm_archs import smoke_lm
+from repro.configs.sasrec import smoke_sasrec
+from repro.models import gnn as gnn_lib
+from repro.models import sasrec as sas_lib
+from repro.models import transformer as tfm
+from repro.models.param import init_params
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run_train(loss_fn, params, batch, state_bits=32):
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-3, state_bits=state_bits))
+    step = jax.jit(make_train_step(loss_fn, tcfg))
+    state = init_opt_state(params, tcfg.adamw)
+    params, state, m = step(params, state, batch)
+    loss0 = float(m["loss"])
+    params, state, m = step(params, state, batch)
+    assert np.isfinite(loss0) and np.isfinite(float(m["loss"]))
+    return loss0, float(m["loss"])
+
+
+# --------------------------------------------------------------- LM family
+@pytest.mark.parametrize("arch", ["yi-6b", "mistral-large-123b"])
+def test_smoke_dense_lm(arch):
+    """Reduced dense GQA transformer (same family as yi/mistral)."""
+    cfg = smoke_lm(moe=False)
+    params = init_params(KEY, tfm.param_specs(cfg))
+    batch = {
+        "tokens": jnp.asarray(np.random.randint(1, cfg.vocab, (2, 16)), jnp.int32),
+        "loss_mask": jnp.ones((2, 16), jnp.float32),
+    }
+    loss_fn = functools.partial(tfm.lm_loss, cfg, tfm.Constraints())
+    l0, l1 = _run_train(loss_fn, params, batch)
+    assert l1 < l0 + 0.5
+
+
+@pytest.mark.parametrize("arch,bits", [("kimi-k2-1t-a32b", 8), ("granite-moe-1b-a400m", 32)])
+def test_smoke_moe_lm(arch, bits):
+    """Reduced MoE (same family as kimi/granite), incl. 8-bit Adam for kimi."""
+    full = get_config(arch)
+    assert full.model.moe is not None
+    cfg = smoke_lm(moe=True)
+    params = init_params(KEY, tfm.param_specs(cfg))
+    batch = {
+        "tokens": jnp.asarray(np.random.randint(1, cfg.vocab, (2, 16)), jnp.int32),
+        "loss_mask": jnp.ones((2, 16), jnp.float32),
+    }
+    loss_fn = functools.partial(tfm.lm_loss, cfg, tfm.Constraints())
+    l0, l1 = _run_train(loss_fn, params, batch, state_bits=bits)
+    assert np.isfinite(l1)
+
+
+def test_smoke_gemma3_sliding():
+    """Reduced 5:1-ish local:global sliding-window arch + decode path."""
+    cfg = smoke_lm(moe=False, sliding=True)
+    params = init_params(KEY, tfm.param_specs(cfg))
+    prefill = jax.jit(tfm.make_prefill(cfg))
+    tokens = jnp.asarray(np.random.randint(1, cfg.vocab, (2, 16)), jnp.int32)
+    logits = prefill(params, {"tokens": tokens})
+    assert logits.shape == (2, 16, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all())
+    # decode against a KV cache
+    dec = jax.jit(tfm.make_decode_step(cfg))
+    cache = {
+        k: jnp.zeros(v.shape, v.dtype)
+        for k, v in tfm.abstract_kv_cache(cfg, 2, 32).items()
+    }
+    lg, cache = dec(params, cache, {"tokens": tokens[:, :1], "cur_len": jnp.int32(3)})
+    assert lg.shape == (2, 1, cfg.vocab_padded)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_sliding_window_masks_old_tokens():
+    """A local-only arch must ignore context beyond the window."""
+    from dataclasses import replace
+    # global_every large ⇒ no global layers: pure local attention.
+    cfg = replace(smoke_lm(moe=False, sliding=True), global_every=1000, sliding_window=4)
+    params = init_params(KEY, tfm.param_specs(cfg))
+    prefill = jax.jit(tfm.make_prefill(cfg))
+    t1 = jnp.asarray(np.random.randint(1, cfg.vocab, (1, 16)), jnp.int32)
+    t2 = t1.at[:, 0:4].set((t1[:, 0:4] % (cfg.vocab - 1)) + 1)  # perturb far past
+    l1 = prefill(params, {"tokens": t1})
+    l2 = prefill(params, {"tokens": t2})
+    np.testing.assert_allclose(
+        np.asarray(l1[:, -1], np.float32), np.asarray(l2[:, -1], np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# -------------------------------------------------------------- GNN family
+@pytest.mark.parametrize("arch", ["gin-tu", "gat-cora", "meshgraphnet", "graphcast"])
+def test_smoke_gnn(arch):
+    full = get_config(arch)
+    cfg = smoke_gnn(full.model.arch)
+    params = init_params(KEY, gnn_lib.param_specs(cfg))
+    n, e = 64, 128
+    rng = np.random.default_rng(1)
+    edges = rng.integers(0, n, (e, 2)).astype(np.int32)
+    batch = {
+        "feats": jnp.asarray(rng.standard_normal((n, cfg.d_feat)).astype(np.float32)),
+        "edges": jnp.asarray(edges),
+        "labels": jnp.asarray(rng.integers(0, cfg.n_out, n).astype(np.int32)),
+        "mask": jnp.ones(n, jnp.float32),
+    }
+    loss_fn = functools.partial(gnn_lib.gnn_loss, cfg)
+    l0, l1 = _run_train(loss_fn, params, batch)
+    assert l1 < l0 + 0.5
+
+    out = gnn_lib.forward(cfg, params, batch)
+    assert out.shape == (n, cfg.n_out)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_smoke_gnn_regression_and_graph_tasks():
+    from dataclasses import replace
+    rng = np.random.default_rng(2)
+    n, e, b = 60, 100, 6
+    cfg = replace(smoke_gnn("meshgraphnet"), task="node_reg", n_out=3)
+    params = init_params(KEY, gnn_lib.param_specs(cfg))
+    batch = {
+        "feats": jnp.asarray(rng.standard_normal((n, cfg.d_feat)).astype(np.float32)),
+        "edges": jnp.asarray(rng.integers(0, n, (e, 2)).astype(np.int32)),
+        "labels": jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32)),
+        "mask": jnp.ones(n, jnp.float32),
+    }
+    loss_fn = functools.partial(gnn_lib.gnn_loss, cfg)
+    l0, l1 = _run_train(loss_fn, params, batch)
+    assert l1 < l0
+
+    cfg = replace(smoke_gnn("gin"), task="graph_class", n_out=2)
+    params = init_params(KEY, gnn_lib.param_specs(cfg))
+    batch = {
+        "feats": jnp.asarray(rng.standard_normal((n, cfg.d_feat)).astype(np.float32)),
+        "edges": jnp.asarray(rng.integers(0, n, (e, 2)).astype(np.int32)),
+        "graph_ids": jnp.asarray(np.repeat(np.arange(b), n // b).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, 2, b).astype(np.int32)),
+        "mask": jnp.ones(b, jnp.float32),
+    }
+    loss_fn = functools.partial(gnn_lib.gnn_loss, cfg)
+    l0, l1 = _run_train(loss_fn, params, batch)
+    assert np.isfinite(l1)
+
+
+def test_smoke_minibatch_sampler_feeds_model():
+    """Real CSR fanout sampler → padded subgraph → GIN train step."""
+    from repro.graph import planted_partition, NeighborSampler
+    from repro.graph.utils import to_csr
+
+    edges, _ = planted_partition(500, 10, 0.2, 0.01, seed=3)
+    indptr, indices = to_csr(edges, 500)
+    sampler = NeighborSampler(indptr, indices, fanouts=(5, 3))
+    rng = np.random.default_rng(0)
+    sub = sampler.sample(np.arange(32), rng)
+    assert sub.n_nodes <= sampler.max_capacity(32)[0]
+    assert (sub.edges[: sub.n_edges] < sub.n_nodes).all()
+
+    cfg = smoke_gnn("gin")
+    params = init_params(KEY, gnn_lib.param_specs(cfg))
+    n_cap = sub.nodes.shape[0]
+    feats = rng.standard_normal((n_cap, cfg.d_feat)).astype(np.float32)
+    batch = {
+        "feats": jnp.asarray(feats),
+        "edges": jnp.asarray(sub.edges),
+        "labels": jnp.asarray(rng.integers(0, cfg.n_out, n_cap).astype(np.int32)),
+        "mask": jnp.asarray(sub.seed_mask.astype(np.float32)),
+    }
+    loss_fn = functools.partial(gnn_lib.gnn_loss, cfg)
+    l0, l1 = _run_train(loss_fn, params, batch)
+    assert np.isfinite(l1)
+
+
+# ------------------------------------------------------------------- recsys
+def test_smoke_sasrec():
+    cfg = smoke_sasrec()
+    params = init_params(KEY, sas_lib.param_specs(cfg))
+    rng = np.random.default_rng(4)
+    b, s = 8, cfg.seq_len
+    batch = {
+        "seq": jnp.asarray(rng.integers(1, cfg.n_items, (b, s)).astype(np.int32)),
+        "pos": jnp.asarray(rng.integers(1, cfg.n_items, (b, s)).astype(np.int32)),
+        "neg": jnp.asarray(rng.integers(1, cfg.n_items, (b, s)).astype(np.int32)),
+    }
+    loss_fn = functools.partial(sas_lib.sasrec_loss, cfg)
+    l0, l1 = _run_train(loss_fn, params, batch)
+    assert l1 < l0
+
+    serve = jax.jit(sas_lib.make_serve_step(cfg))
+    scores = serve(params, {"seq": batch["seq"]})
+    assert scores.shape == (b, cfg.n_items)
+    assert bool(jnp.isfinite(scores).all())
+
+    retr = jax.jit(sas_lib.make_retrieval_step(cfg))
+    cand = jnp.asarray(rng.integers(1, cfg.n_items, 100).astype(np.int32))
+    sc = retr(params, {"seq": batch["seq"][:1], "candidates": cand})
+    assert sc.shape == (100,)
+    # retrieval scores must equal the serve scores at those candidates
+    np.testing.assert_allclose(
+        np.asarray(sc), np.asarray(scores[0][cand]), rtol=1e-5, atol=1e-5
+    )
+
+
+# --------------------------------------------------------------- registry
+def test_registry_covers_assignment():
+    assigned = {
+        "kimi-k2-1t-a32b", "granite-moe-1b-a400m", "yi-6b", "gemma3-4b",
+        "mistral-large-123b", "gin-tu", "meshgraphnet", "graphcast",
+        "gat-cora", "sasrec",
+    }
+    assert assigned <= set(REGISTRY)
+    for name in assigned:
+        arch = get_config(name)
+        assert len(arch.shapes) == 4
+        for shape in arch.shapes.values():
+            if not shape.skip:
+                specs = input_specs(arch, shape)
+                assert specs  # every runnable cell has input stand-ins
+
+
+def test_exact_configs_match_assignment():
+    k = get_config("kimi-k2-1t-a32b").model
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_kv_heads) == (61, 7168, 64, 8)
+    assert (k.moe.n_experts, k.moe.top_k, k.vocab) == (384, 8, 163840)
+    y = get_config("yi-6b").model
+    assert (y.n_layers, y.d_model, y.n_heads, y.n_kv_heads, y.d_ff, y.vocab) == \
+        (32, 4096, 32, 4, 11008, 64000)
+    g = get_config("gemma3-4b").model
+    assert (g.n_layers, g.d_model, g.n_heads, g.vocab, g.global_every) == \
+        (34, 2560, 8, 262144, 6)
+    m = get_config("mistral-large-123b").model
+    assert (m.n_layers, m.d_model, m.n_heads, m.d_ff, m.vocab) == \
+        (88, 12288, 96, 28672, 32768)
+    gr = get_config("granite-moe-1b-a400m").model
+    assert (gr.n_layers, gr.d_model, gr.moe.n_experts, gr.moe.top_k, gr.vocab) == \
+        (24, 1024, 32, 8, 49155)
+    s = get_config("sasrec").model
+    assert (s.embed_dim, s.n_blocks, s.n_heads, s.seq_len) == (50, 2, 1, 50)
+    gc = get_config("graphcast").model
+    assert (gc.n_layers, gc.d_hidden) == (16, 512)
+    mg = get_config("meshgraphnet").model
+    assert (mg.n_layers, mg.d_hidden) == (15, 128)
+    gi = get_config("gin-tu").model
+    assert (gi.n_layers, gi.d_hidden) == (5, 64)
+    ga = get_config("gat-cora").model
+    assert (ga.n_layers, ga.n_heads) == (2, 8)

@@ -1,0 +1,91 @@
+"""Count–min sketch invariants: never underestimates, exact without
+collisions, linear/mergeable, accuracy improves with width."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cms
+
+
+def _true_counts(keys, weights, domain):
+    out = np.zeros(domain)
+    np.add.at(out, keys, weights)
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+def test_never_underestimates(seed, n_keys):
+    """The defining CMS guarantee: estimate ≥ true count."""
+    rng = np.random.default_rng(seed)
+    cfg = cms.CMSConfig(rows=4, cols=64, seed=1)
+    keys = rng.integers(0, 50, size=n_keys).astype(np.int32)
+    w = rng.uniform(0, 10, size=n_keys).astype(np.float32)
+    sketch = cms.update(cms.init_sketch(cfg), jnp.asarray(keys), jnp.asarray(w), cfg)
+    est = np.asarray(cms.query(sketch, jnp.arange(50, dtype=jnp.int32), cfg))
+    true = _true_counts(keys, w, 50)
+    assert (est >= true - 1e-3).all()
+
+
+def test_exact_when_wide():
+    """With cols ≫ #distinct keys, all rows collide with high probability on
+    nothing and the estimate is exact."""
+    rng = np.random.default_rng(0)
+    cfg = cms.CMSConfig(rows=4, cols=8192, seed=3)
+    keys = rng.integers(0, 32, size=500).astype(np.int32)
+    w = np.ones(500, np.float32)
+    sketch = cms.update(cms.init_sketch(cfg), jnp.asarray(keys), jnp.asarray(w), cfg)
+    est = np.asarray(cms.query(sketch, jnp.arange(32, dtype=jnp.int32), cfg))
+    true = _true_counts(keys, w, 32)
+    np.testing.assert_allclose(est, true, rtol=1e-6)
+
+
+def test_merge_is_linear():
+    """Sharded updates + all-reduce == single-stream update (DESIGN.md §2)."""
+    rng = np.random.default_rng(1)
+    cfg = cms.CMSConfig(rows=4, cols=128, seed=5)
+    keys = rng.integers(0, 64, size=400).astype(np.int32)
+    w = rng.uniform(0, 5, size=400).astype(np.float32)
+    s_all = cms.update(cms.init_sketch(cfg), jnp.asarray(keys), jnp.asarray(w), cfg)
+    s1 = cms.update(cms.init_sketch(cfg), jnp.asarray(keys[:200]), jnp.asarray(w[:200]), cfg)
+    s2 = cms.update(cms.init_sketch(cfg), jnp.asarray(keys[200:]), jnp.asarray(w[200:]), cfg)
+    np.testing.assert_allclose(np.asarray(cms.merge(s1, s2)), np.asarray(s_all), rtol=1e-6)
+
+
+def test_padding_masked():
+    cfg = cms.CMSConfig(rows=2, cols=64, seed=2)
+    keys = jnp.asarray([3, -1, 3, -1], jnp.int32)  # -1 = padding
+    w = jnp.asarray([1.0, 100.0, 2.0, 100.0], jnp.float32)
+    sketch = cms.update(cms.init_sketch(cfg), keys, w, cfg)
+    est = float(cms.query(sketch, jnp.asarray([3], jnp.int32), cfg)[0])
+    assert abs(est - 3.0) < 1e-5
+
+
+def test_more_width_more_accurate():
+    """Paper §5.3.4 / Fig 7: wider sketch ⇒ less overestimation."""
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 2000, size=20000).astype(np.int32)
+    w = np.ones(20000, np.float32)
+    true = _true_counts(keys, w, 2000)
+    errs = []
+    for cols in (128, 512, 4096):
+        cfg = cms.CMSConfig(rows=4, cols=cols, seed=11)
+        sketch = cms.update(cms.init_sketch(cfg), jnp.asarray(keys), jnp.asarray(w), cfg)
+        est = np.asarray(cms.query(sketch, jnp.arange(2000, dtype=jnp.int32), cfg))
+        errs.append(float(np.mean(est - true)))
+    assert errs[2] < errs[1] < errs[0]
+
+
+def test_more_rows_tighter_tail():
+    """Paper §4.2.1: more hash functions ⇒ smaller chance of big errors."""
+    rng = np.random.default_rng(9)
+    keys = rng.integers(0, 1000, size=8000).astype(np.int32)
+    w = np.ones(8000, np.float32)
+    true = _true_counts(keys, w, 1000)
+    tails = []
+    for rows in (1, 4):
+        cfg = cms.CMSConfig(rows=rows, cols=256, seed=13)
+        sketch = cms.update(cms.init_sketch(cfg), jnp.asarray(keys), jnp.asarray(w), cfg)
+        est = np.asarray(cms.query(sketch, jnp.arange(1000, dtype=jnp.int32), cfg))
+        tails.append(float(np.percentile(est - true, 99)))
+    assert tails[1] <= tails[0]

@@ -1,0 +1,70 @@
+"""Integrity of the multi-pod dry-run evidence (experiments/dryrun/*.json).
+
+Skipped when the evidence directory is absent (fresh checkout) — generate
+it with ``PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both``.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(DRYRUN, "*.json")),
+    reason="dry-run evidence not generated",
+)
+
+
+def _records():
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            yield json.load(f)
+
+
+def test_every_cell_ok_or_documented_skip():
+    statuses = {}
+    for rec in _records():
+        key = (rec["arch"], rec["shape"], rec["mesh"])
+        statuses[key] = rec["status"]
+        if rec["status"] == "skipped":
+            assert rec.get("skip_reason"), key
+        else:
+            assert rec["status"] == "ok", (key, rec.get("error", "")[:200])
+    # 11 archs × 4 shapes × 2 meshes
+    assert len(statuses) == 88
+    assert sum(1 for s in statuses.values() if s == "ok") == 80
+    assert sum(1 for s in statuses.values() if s == "skipped") == 8
+
+
+def test_ok_cells_carry_roofline_inputs():
+    for rec in _records():
+        if rec["status"] != "ok":
+            continue
+        assert rec["n_devices"] in (256, 512)
+        assert rec["memory"]["argument_size_in_bytes"] >= 0
+        assert "flops" in rec["cost"]
+        assert rec["hlo_dot_flops"] >= 0
+        assert rec["collective_bytes"] >= 0
+        assert rec["meta"].get("model_flops", 0) > 0
+
+
+def test_multi_pod_uses_512_devices():
+    for rec in _records():
+        if rec["status"] != "ok":
+            continue
+        assert rec["n_devices"] == (512 if rec["mesh"] == "multi" else 256)
+
+
+def test_long_context_cell_runs_for_hybrid_arch_only():
+    saw_gemma_long = False
+    for rec in _records():
+        if rec["shape"] != "long_500k":
+            continue
+        if rec["arch"] == "gemma3-4b":
+            assert rec["status"] == "ok"
+            saw_gemma_long = True
+        else:
+            assert rec["status"] == "skipped"
+    assert saw_gemma_long

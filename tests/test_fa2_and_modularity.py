@@ -1,0 +1,85 @@
+"""ForceAtlas2 layout behaviour + modularity vs networkx oracle."""
+import networkx as nx
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import forceatlas2 as fa2
+from repro.core.coloring import color_groups
+from repro.core.modularity import modularity
+from repro.graph import planted_partition, pad_edges
+from repro.graph.utils import degrees
+
+
+def test_modularity_matches_networkx():
+    edges_np, true_labels = planted_partition(200, 4, 0.3, 0.02, seed=5)
+    n = 200
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    q = float(modularity(edges, jnp.asarray(true_labels), n))
+    g = nx.Graph()
+    g.add_nodes_from(range(n))
+    g.add_edges_from(map(tuple, edges_np))
+    comms = [set(np.where(true_labels == c)[0]) for c in np.unique(true_labels)]
+    q_nx = nx.algorithms.community.modularity(g, comms)
+    assert abs(q - q_nx) < 1e-3, (q, q_nx)
+
+
+def test_layout_finite_and_converging():
+    edges_np, _ = planted_partition(120, 4, 0.4, 0.02, seed=2)
+    n = 120
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    mass = degrees(edges, n).astype(jnp.float32) + 1.0
+    w = jnp.ones(edges.shape[0], jnp.float32)
+    cfg = fa2.FA2Config(iterations=60, repulsion="exact", use_radii=False)
+    pos, trace = fa2.layout(edges, w, mass, n, cfg)
+    pos = np.asarray(pos)
+    assert np.isfinite(pos).all()
+    # Max force in the last quarter below the first quarter: system relaxing.
+    t = np.asarray(trace)
+    assert t[-len(t) // 4 :].mean() < t[: len(t) // 4].mean()
+
+
+def test_layout_separates_communities():
+    """Force layouts place intra-community pairs closer than inter pairs."""
+    edges_np, labels = planted_partition(120, 3, 0.5, 0.01, seed=9)
+    n = 120
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    mass = degrees(edges, n).astype(jnp.float32) + 1.0
+    w = jnp.ones(edges.shape[0], jnp.float32)
+    cfg = fa2.FA2Config(iterations=150, repulsion="exact", use_radii=False, seed=3)
+    pos, _ = fa2.layout(edges, w, mass, n, cfg)
+    pos = np.asarray(pos)
+    d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+    same = labels[:, None] == labels[None, :]
+    off = ~np.eye(n, dtype=bool)
+    assert d[same & off].mean() < 0.7 * d[~same].mean()
+
+
+def test_grid_repulsion_close_to_exact():
+    """The uniform-grid far-field (Barnes–Hut analogue) approximates exact
+    repulsion directionally: cosine similarity of force vectors ≥ 0.8."""
+    rng = np.random.default_rng(4)
+    n = 256
+    pos = jnp.asarray(rng.uniform(-500, 500, size=(n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(1, 5, size=n).astype(np.float32))
+    cfg = fa2.FA2Config(repulsion="grid", grid_size=16, use_radii=False)
+    f_grid = fa2._grid_repulsion(pos, mass, cfg)
+    from repro.kernels.repulsion.ref import repulsion_ref
+
+    f_exact = repulsion_ref(pos, mass, cfg.repulsion_k)
+    f_grid, f_exact = np.asarray(f_grid), np.asarray(f_exact)
+    cos = np.sum(f_grid * f_exact, -1) / (
+        np.linalg.norm(f_grid, axis=-1) * np.linalg.norm(f_exact, axis=-1) + 1e-9
+    )
+    assert np.median(cos) > 0.8
+
+
+def test_color_groups_bulk_and_range():
+    sizes = jnp.asarray(np.random.default_rng(0).pareto(1.5, 500).astype(np.float32) + 0.1)
+    groups = np.asarray(color_groups(sizes))
+    assert groups.min() >= 0 and groups.max() <= 10
+    s = np.asarray(sizes)
+    bulk_mass = s[groups == 0].sum() / s.sum()
+    assert 0.3 < bulk_mass < 0.7  # "smaller communities covering 50% of α"
+    # biggest community gets the biggest color bucket
+    assert groups[np.argmax(s)] == 10

@@ -1,0 +1,128 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes per the deliverable spec."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cms as cms_lib
+from repro.kernels.cms.cms_update import cms_update_pallas
+from repro.kernels.cms.ref import cms_update_ref
+from repro.kernels.cms import ops as cms_ops
+from repro.kernels.repulsion.nbody import repulsion_pallas
+from repro.kernels.repulsion.ref import repulsion_ref
+from repro.kernels.repulsion import ops as rep_ops
+from repro.kernels.segment.seg_matmul import segment_sum_pallas
+from repro.kernels.segment.ref import segment_sum_ref
+from repro.kernels.segment import ops as seg_ops
+
+
+# ---------------------------------------------------------------- repulsion
+@pytest.mark.parametrize("n,tile", [(128, 128), (256, 128), (512, 256), (1024, 512)])
+@pytest.mark.parametrize("use_radii", [True, False])
+def test_repulsion_kernel_vs_ref(n, tile, use_radii):
+    rng = np.random.default_rng(n + use_radii)
+    pos = jnp.asarray(rng.uniform(-100, 100, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 4.0, n).astype(np.float32))
+    radii = jnp.asarray(rng.uniform(0.0, 2.0, n).astype(np.float32))
+    got = repulsion_pallas(
+        pos, mass, radii, kr=80.0, ti=tile, tj=tile, use_radii=use_radii, interpret=True
+    )
+    want = repulsion_ref(pos, mass, 80.0, radii=radii if use_radii else None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-3)
+
+
+def test_repulsion_ops_backends_agree():
+    rng = np.random.default_rng(3)
+    n = 300  # deliberately not tile-aligned: exercises padding
+    pos = jnp.asarray(rng.uniform(-10, 10, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    f_ref = rep_ops.repulsion(pos, mass, 80.0, backend="ref")
+    f_chk = rep_ops.repulsion(pos, mass, 80.0, backend="chunked")
+    f_pal = rep_ops.repulsion(pos, mass, 80.0, backend="interpret", tile=128)
+    np.testing.assert_allclose(np.asarray(f_chk), np.asarray(f_ref), rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_ref), rtol=2e-4, atol=1e-3)
+
+
+def test_repulsion_padding_neutral():
+    """mass-0 padding must not change forces on real nodes."""
+    rng = np.random.default_rng(5)
+    n = 200
+    pos = jnp.asarray(rng.uniform(-10, 10, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    f1 = rep_ops.repulsion(pos, mass, 80.0, backend="interpret", tile=128)
+    pos_p = jnp.concatenate([pos, jnp.zeros((56, 2), jnp.float32)])
+    mass_p = jnp.concatenate([mass, jnp.zeros(56, jnp.float32)])
+    f2 = rep_ops.repulsion(pos_p, mass_p, 80.0, backend="interpret", tile=128)[:n]
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------- CMS
+@pytest.mark.parametrize("rows,cols,n,blk", [(1, 128, 700, 256), (4, 512, 2000, 1024), (4, 5000, 4096, 1024)])
+def test_cms_kernel_vs_ref(rows, cols, n, blk):
+    rng = np.random.default_rng(rows * cols)
+    h = jnp.asarray(rng.integers(0, cols, (rows, n)).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0, 3, n).astype(np.float32))
+    sketch = jnp.asarray(rng.uniform(0, 1, (rows, cols)).astype(np.float32))
+    got = cms_update_pallas(sketch, h, w, cols, blk=blk, interpret=True)
+    want = cms_update_ref(sketch, h, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_cms_kernel_padding_mask():
+    cols, n = 64, 100
+    h = jnp.asarray(np.full((4, n), 7, np.int32))
+    h = h.at[:, 50:].set(-1)  # padding
+    w = jnp.ones(n, jnp.float32)
+    sketch = jnp.zeros((4, cols), jnp.float32)
+    got = cms_update_pallas(sketch, h, w, cols, blk=64, interpret=True)
+    assert float(got[0, 7]) == 50.0
+
+
+def test_cms_ops_matches_core_cms():
+    """kernels/cms/ops must agree with core/cms.update (same hash family)."""
+    rng = np.random.default_rng(11)
+    cfg = cms_lib.CMSConfig(rows=4, cols=256, seed=3)
+    keys = jnp.asarray(rng.integers(0, 100, 500).astype(np.int32))
+    w = jnp.asarray(rng.uniform(0, 2, 500).astype(np.float32))
+    s0 = cms_lib.init_sketch(cfg)
+    want = cms_lib.update(s0, keys, w, cfg)
+    got = cms_ops.update(s0, keys, w, cfg, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------- segment sum
+@pytest.mark.parametrize("e,d,n,tn,blk", [
+    (500, 8, 100, 128, 256),
+    (2048, 64, 300, 256, 512),
+    (1000, 128, 1000, 256, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum_kernel_vs_ref(e, d, n, tn, blk, dtype):
+    rng = np.random.default_rng(e + d)
+    data = jnp.asarray(rng.standard_normal((e, d)).astype(np.float32)).astype(dtype)
+    seg = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+    got = segment_sum_pallas(data, seg, n, tn=tn, blk=blk, interpret=True)
+    want = segment_sum_ref(data.astype(jnp.float32), seg, n)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=rtol, atol=1e-2
+    )
+
+
+def test_segment_sum_drops_out_of_range():
+    data = jnp.ones((10, 4), jnp.float32)
+    seg = jnp.asarray([0, 1, 2, 99, -1, 0, 1, 2, 99, -1], jnp.int32)
+    got = segment_sum_pallas(data, seg, 3, tn=128, blk=128, interpret=True)
+    want = segment_sum_ref(data, seg, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    assert float(got.sum()) == 6 * 4  # 6 in-range rows
+
+
+def test_segment_ops_wrapper():
+    rng = np.random.default_rng(21)
+    data = jnp.asarray(rng.standard_normal((256, 16)).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, 50, 256).astype(np.int32))
+    a = seg_ops.segment_sum(data, seg, 50, backend="ref")
+    b = seg_ops.segment_sum(data, seg, 50, backend="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)

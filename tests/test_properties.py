@@ -1,0 +1,73 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.repulsion.ref import repulsion_ref
+from repro.kernels.repulsion import ops as rep_ops
+from repro.core.modularity import modularity
+from repro.core.coloring import color_groups
+from repro.graph.utils import pad_edges
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 64))
+def test_repulsion_conserves_momentum(seed, n):
+    """Newton's third law: pairwise forces cancel — Σᵢ fᵢ ≈ 0."""
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.uniform(-50, 50, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 3.0, n).astype(np.float32))
+    f = repulsion_ref(pos, mass, kr=80.0)
+    total = np.asarray(jnp.sum(f, axis=0))
+    scale = float(jnp.max(jnp.linalg.norm(f, axis=-1))) + 1e-6
+    assert np.abs(total).max() < 1e-3 * scale * n
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_repulsion_translation_invariant(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    pos = jnp.asarray(rng.uniform(-10, 10, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    f1 = np.asarray(rep_ops.repulsion(pos, mass, 80.0, backend="ref"))
+    f2 = np.asarray(rep_ops.repulsion(pos + 100.0, mass, 80.0, backend="ref"))
+    # f32: the shift costs mantissa bits in the pairwise differences, so
+    # compare directionally + in magnitude rather than elementwise-tight.
+    cos = np.sum(f1 * f2, -1) / (
+        np.linalg.norm(f1, axis=-1) * np.linalg.norm(f2, axis=-1) + 1e-9
+    )
+    assert np.median(cos) > 0.999
+    ratio = (np.linalg.norm(f2, axis=-1) + 1e-9) / (np.linalg.norm(f1, axis=-1) + 1e-9)
+    assert 0.9 < np.median(ratio) < 1.1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_modularity_bounds_and_singletons(seed):
+    """Q ∈ [-1, 1); all-singleton partition of a simple graph has Q ≤ 0."""
+    rng = np.random.default_rng(seed)
+    n, e = 40, 80
+    edges_np = rng.integers(0, n, (e, 2)).astype(np.int32)
+    edges_np = edges_np[edges_np[:, 0] != edges_np[:, 1]]
+    if len(edges_np) == 0:
+        return
+    edges = jnp.asarray(pad_edges(edges_np, e, n))
+    singles = jnp.arange(n, dtype=jnp.int32)
+    q = float(modularity(edges, singles, n))
+    assert -1.0 <= q <= 0.0 + 1e-6
+    one = jnp.zeros(n, jnp.int32)
+    q_one = float(modularity(edges, one, n))
+    assert abs(q_one) < 1e-5  # single community: Q = 0 exactly
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_color_groups_monotone_in_size(seed):
+    """Bigger communities never get a smaller color bucket."""
+    rng = np.random.default_rng(seed)
+    sizes = jnp.asarray(rng.pareto(1.5, 200).astype(np.float32) + 0.01)
+    groups = np.asarray(color_groups(sizes))
+    order = np.argsort(np.asarray(sizes))
+    g_sorted = groups[order]
+    assert (np.diff(g_sorted) >= 0).all()

@@ -1,0 +1,124 @@
+"""SCoDA correctness: equivalence to the sequential algorithm at block_size=1,
+parity at production block sizes, determinism, and label invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import planted_partition, mode_degree, pad_edges
+from repro.core.scoda import ScodaConfig, detect_communities, dense_labels
+from repro.core.modularity import modularity
+
+
+def seq_scoda(edges_np, n, threshold, rounds=1, tie="join"):
+    """The sequential oracle: Hollocou's SCoDA with the paper's round scheme."""
+    com = np.arange(n)
+    deg = np.zeros(n, np.int64)
+    for r in range(rounds):
+        t = min(threshold ** (r + 1), 2**30)
+        for u, v in edges_np:
+            deg[u] += 1
+            deg[v] += 1
+            if deg[u] <= t and deg[v] <= t:
+                if deg[u] < deg[v]:
+                    com[u] = com[v]
+                elif deg[v] < deg[u]:
+                    com[v] = com[u]
+                elif tie == "join":
+                    com[u] = com[v]
+    return com.astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    edges, labels = planted_partition(300, 6, 0.25, 0.005, seed=7)
+    return edges, labels, 300
+
+
+@pytest.mark.parametrize("tie", ["join", "skip"])
+def test_block_size_one_equals_sequential(small_graph, tie):
+    """block_size=1 *is* the sequential algorithm — exact label equality."""
+    edges_np, _, n = small_graph
+    edges_np = edges_np[:600]
+    dt = max(2, mode_degree(edges_np, n))
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    for rounds in (1, 2):
+        cfg = ScodaConfig(degree_threshold=dt, rounds=rounds, block_size=1, tie_break=tie)
+        lab, _ = detect_communities(edges, n, cfg)
+        ref = seq_scoda(edges_np, n, dt, rounds=rounds, tie=tie)
+        np.testing.assert_array_equal(np.asarray(lab), ref)
+
+
+def test_parallel_matches_sequential_quality(small_graph):
+    """At production block sizes the partition quality tracks the oracle."""
+    edges_np, _, n = small_graph
+    dt = max(2, mode_degree(edges_np, n))
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    ref = seq_scoda(edges_np, n, dt, rounds=4)
+    q_ref = float(modularity(edges, jnp.asarray(ref), n))
+    cfg = ScodaConfig(degree_threshold=dt, rounds=4, block_size=1024, tie_break="join")
+    lab, _ = detect_communities(edges, n, cfg)
+    q_par = float(modularity(edges, lab, n))
+    assert q_par > 0.5 * q_ref, (q_par, q_ref)
+
+
+def test_deterministic(small_graph):
+    edges_np, _, n = small_graph
+    dt = max(2, mode_degree(edges_np, n))
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    cfg = ScodaConfig(degree_threshold=dt, rounds=3, block_size=512)
+    lab1, deg1 = detect_communities(edges, n, cfg)
+    lab2, deg2 = detect_communities(edges, n, cfg)
+    np.testing.assert_array_equal(np.asarray(lab1), np.asarray(lab2))
+    np.testing.assert_array_equal(np.asarray(deg1), np.asarray(deg2))
+
+
+def test_labels_are_valid_node_ids(small_graph):
+    edges_np, _, n = small_graph
+    dt = max(2, mode_degree(edges_np, n))
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    cfg = ScodaConfig(degree_threshold=dt, rounds=4, block_size=256)
+    lab, deg = detect_communities(edges, n, cfg)
+    lab = np.asarray(lab)
+    assert lab.min() >= 0 and lab.max() < n
+    assert (np.asarray(deg) >= 0).all()
+
+
+def test_multi_round_merges(small_graph):
+    """Paper Table 3: more rounds → communities merge (fewer supernodes)."""
+    edges_np, _, n = small_graph
+    dt = max(2, mode_degree(edges_np, n))
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    counts = []
+    for rounds in (1, 4):
+        cfg = ScodaConfig(degree_threshold=dt, rounds=rounds, block_size=512)
+        lab, _ = detect_communities(edges, n, cfg)
+        counts.append(len(np.unique(np.asarray(lab))))
+    assert counts[1] <= counts[0]
+
+
+def test_isolated_nodes_stay_singletons():
+    n = 64
+    edges_np = np.array([[0, 1], [1, 2], [2, 3]], np.int32)
+    edges = jnp.asarray(pad_edges(edges_np, 8, n))
+    cfg = ScodaConfig(degree_threshold=3, rounds=2, block_size=4)
+    lab, _ = detect_communities(edges, n, cfg)
+    lab = np.asarray(lab)
+    for i in range(4, n):
+        assert lab[i] == i
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_dense_labels_bijective(seed):
+    rng = np.random.default_rng(seed)
+    n = 50
+    raw = rng.integers(0, n, size=n).astype(np.int32)
+    dense, count = dense_labels(jnp.asarray(raw), n)
+    dense = np.asarray(dense)
+    assert int(count) == len(np.unique(raw))
+    # same raw label ⇔ same dense label
+    for lab in np.unique(raw):
+        vals = dense[raw == lab]
+        assert (vals == vals[0]).all()
+    assert dense.min() >= 0 and dense.max() < int(count)

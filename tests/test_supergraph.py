@@ -1,0 +1,71 @@
+"""Supergraph aggregation invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cms as cms_lib
+from repro.core.supergraph import aggregate_edges, build_supergraph
+from repro.graph import planted_partition, pad_edges
+from repro.graph.utils import degrees
+
+
+def _oracle_aggregate(edges, labels):
+    pairs = {}
+    for u, v in edges:
+        a, b = labels[u], labels[v]
+        if a == b:
+            continue
+        key = (min(a, b), max(a, b))
+        pairs[key] = pairs.get(key, 0) + 1
+    return pairs
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_aggregate_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, e = 60, 150
+    edges_np = rng.integers(0, n, size=(e, 2)).astype(np.int32)
+    edges_np = edges_np[edges_np[:, 0] != edges_np[:, 1]]
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    edges = jnp.asarray(pad_edges(edges_np, e, n))
+    s_cap, cap = 16, 256
+    se, sw, n_se = aggregate_edges(edges, jnp.asarray(labels), s_cap, cap)
+    se, sw = np.asarray(se), np.asarray(sw)
+    oracle = _oracle_aggregate(edges_np, labels)
+    assert int(n_se) == len(oracle)
+    got = {}
+    for (a, b), w in zip(se, sw):
+        if a < s_cap and b < s_cap and w > 0:
+            got[(int(a), int(b))] = got.get((int(a), int(b)), 0) + w
+    assert got == {k: float(v) for k, v in oracle.items()}
+
+
+def test_no_self_loops_and_canonical_order():
+    edges_np, _ = planted_partition(200, 5, 0.3, 0.02, seed=1)
+    n = 200
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    labels = jnp.asarray(np.random.default_rng(0).integers(0, 8, n).astype(np.int32))
+    se, sw, n_se = aggregate_edges(edges, labels, 8, 64)
+    se = np.asarray(se)
+    live = np.asarray(sw) > 0
+    assert (se[live, 0] < se[live, 1]).all()  # canonical + no self loops
+
+
+def test_build_supergraph_sizes_upper_bound_degree_sum():
+    """CMS never underestimates ⇒ supernode size ≥ Σ member degrees."""
+    edges_np, _ = planted_partition(300, 6, 0.3, 0.01, seed=3)
+    n = 300
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    deg = degrees(edges, n)
+    labels = jnp.asarray(np.random.default_rng(1).integers(0, 300, n).astype(np.int32))
+    cfg = cms_lib.CMSConfig(rows=4, cols=2048, seed=0)
+    sg = build_supergraph(edges, labels, deg, n, 300, 4096, cfg)
+    sizes = np.asarray(sg.sizes)
+    labd = np.asarray(sg.labels)
+    true = np.zeros(300)
+    np.add.at(true, labd, np.asarray(deg))
+    live = np.arange(300) < int(sg.n_supernodes)
+    assert (sizes[live] >= true[live] - 1e-3).all()
+    # wide sketch ⇒ near-exact
+    np.testing.assert_allclose(sizes[live], true[live], rtol=0.05)
