@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated module subset")
     args = ap.parse_args()
 
-    from benchmarks import (fig_params, kernels_bench, roofline,
+    from benchmarks import (fig_params, kernels_bench, roofline, stream_bench,
                             table1_speedup, table2_hashes, table3_rounds)
 
     modules = {
@@ -25,6 +25,7 @@ def main() -> None:
         "table3": table3_rounds,
         "figs": fig_params,
         "kernels": kernels_bench,
+        "stream": stream_bench,
         "roofline": roofline,
     }
     if args.only:

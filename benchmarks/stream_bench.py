@@ -1,0 +1,72 @@
+"""Streaming engine vs one-shot: pass count, chunk throughput, peak device
+bytes.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench
+    PYTHONPATH=src python -m benchmarks.run --only stream
+
+CSV rows (name,us_per_call,derived) per the harness contract. For each
+suite graph the one-shot path (whole edge list as a single chunk) is
+compared against the streamed path (chunk size = |E|/8): the streamed run
+must report lower peak device bytes — its residency swaps the full edge
+materialization for chunk buffers — while producing identical labels and
+supergraph.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import SUITE, row, time_call
+from repro.core import StreamConfig, biggraphvis, default_config
+from repro.graph import mode_degree
+
+
+def bench_graph(name: str, edges: np.ndarray, n: int, rounds: int = 4):
+    e = len(edges)
+    # block_size must divide the chunk for the chunked block partition to
+    # match one-shot (bit-exact results); chunk ≈ |E|/8 → a real multi-chunk
+    # stream on every suite graph.
+    block = 2048
+    chunk = max(block, (e // 8 // block) * block)
+    cfg = default_config(n, e, mode_degree(edges, n), rounds=rounds, iterations=10)
+    cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=block))
+    scfg = StreamConfig(chunk_size=chunk)
+
+    res_one = biggraphvis(edges, n, cfg)
+    res_str = biggraphvis(edges, n, cfg, stream=scfg)
+    assert np.array_equal(res_one.labels, res_str.labels), name
+    assert np.array_equal(
+        np.asarray(res_one.supergraph.edges), np.asarray(res_str.supergraph.edges)
+    ), name
+    s_one, s_str = res_one.stream, res_str.stream
+    assert s_str.peak_device_bytes < s_one.peak_device_bytes, (
+        name, s_str.peak_device_bytes, s_one.peak_device_bytes)
+
+    t_one = time_call(lambda: biggraphvis(edges, n, cfg))
+    t_str = time_call(lambda: biggraphvis(edges, n, cfg, stream=scfg))
+    yield row(
+        f"bgv_oneshot/{name}", t_one,
+        f"passes={s_one.passes};chunks={s_one.chunks};"
+        f"chunk_size={s_one.chunk_size};peak_bytes={s_one.peak_device_bytes}",
+    )
+    yield row(
+        f"bgv_stream/{name}", t_str,
+        f"passes={s_str.passes};chunks={s_str.chunks};"
+        f"chunk_size={s_str.chunk_size};"
+        f"edges_per_s={s_str.edges_per_s:.3e};"
+        f"peak_bytes={s_str.peak_device_bytes}",
+    )
+
+
+def run(quick: bool = False):
+    names = list(SUITE)[:1] if quick else list(SUITE)
+    for name in names:
+        builder, n = SUITE[name]
+        yield from bench_graph(name, builder(), n, rounds=2 if quick else 4)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for line in run():
+        print(line)

@@ -1,10 +1,33 @@
 """BigGraphVis core: streaming community detection + CMS + supergraph +
 ForceAtlas2, per the paper. See DESIGN.md for the GPU→TPU adaptation."""
-from repro.core.scoda import ScodaConfig, detect_communities, dense_labels
+from repro.core.scoda import (
+    ScodaConfig,
+    detect_communities,
+    dense_labels,
+    scoda_finalize,
+    scoda_init,
+    scoda_update,
+)
 from repro.core.cms import CMSConfig, init_sketch, update, query, merge
-from repro.core.supergraph import Supergraph, build_supergraph, aggregate_edges
+from repro.core.supergraph import (
+    Supergraph,
+    agg_finalize,
+    agg_init,
+    agg_update,
+    aggregate_edges,
+    build_supergraph,
+    community_sizes,
+)
 from repro.core.forceatlas2 import FA2Config, layout, step, init_positions
 from repro.core.modularity import modularity
+from repro.core.stream import (
+    EdgeChunkStream,
+    StreamConfig,
+    StreamStats,
+    stream_detect,
+    stream_pipeline,
+    stream_supergraph,
+)
 from repro.core.coloring import color_groups, node_colors, write_svg, PALETTE
 from repro.core.pipeline import (
     BGVConfig,

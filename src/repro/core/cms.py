@@ -70,3 +70,17 @@ def query(sketch: jnp.ndarray, keys: jnp.ndarray, cfg: CMSConfig) -> jnp.ndarray
 def merge(*sketches: jnp.ndarray) -> jnp.ndarray:
     """CMS is linear: shard-local sketches merge by addition."""
     return functools.reduce(jnp.add, sketches)
+
+
+# --------------------------------------------------------------------------
+# Chunk-incremental API (core/stream.py engine). The sketch is linear, so
+# ``update`` already *is* the chunk step: init → update×chunks → finalize.
+# ``finalize`` is the identity — it exists so every streamed stage exposes
+# the same init/update/finalize contract.
+# --------------------------------------------------------------------------
+
+init = init_sketch
+
+
+def finalize(sketch: jnp.ndarray) -> jnp.ndarray:
+    return sketch

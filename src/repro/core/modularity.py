@@ -14,25 +14,50 @@ import jax
 import jax.numpy as jnp
 
 
+# Chunk-incremental API (core/stream.py engine): the three accumulators
+# (m, intra, dcom) are plain sums over edges, so chunked accumulation is
+# exact. ``modularity`` is the one-shot wrapper over a single chunk.
+
+
+def modularity_init(n_nodes: int):
+    """Fresh accumulators: (m scalar, intra [n+1], dcom [n+1]) float32."""
+    return (
+        jnp.zeros((), jnp.float32),
+        jnp.zeros(n_nodes + 1, jnp.float32),
+        jnp.zeros(n_nodes + 1, jnp.float32),
+    )
+
+
+def _modularity_update_body(state, chunk, labels_ext):
+    """Accumulate one edge chunk. ``labels_ext`` [n+1] with trash slot = -1."""
+    m, intra, dcom = state
+    trash = labels_ext.shape[0] - 1
+    cu = labels_ext[jnp.minimum(chunk[:, 0], trash)]
+    cv = labels_ext[jnp.minimum(chunk[:, 1], trash)]
+    valid = (chunk[:, 0] != trash) & (chunk[:, 1] != trash)
+    m = m + jnp.sum(valid).astype(jnp.float32)
+    key = jnp.where(valid & (cu == cv), cu, trash)
+    intra = intra.at[key].add(1.0)
+    dcom = dcom.at[jnp.where(valid, cu, trash)].add(1.0)
+    dcom = dcom.at[jnp.where(valid, cv, trash)].add(1.0)
+    return m, intra, dcom
+
+
+modularity_update = jax.jit(_modularity_update_body, donate_argnums=(0,))
+
+
+def _modularity_finalize_body(state):
+    m, intra, dcom = state
+    return jnp.sum(intra[:-1] / m - (dcom[:-1] / (2.0 * m)) ** 2)
+
+
+modularity_finalize = jax.jit(_modularity_finalize_body)
+
+
 @functools.partial(jax.jit, static_argnames=("n_nodes",))
 def modularity(edges: jnp.ndarray, labels: jnp.ndarray, n_nodes: int) -> jnp.ndarray:
     """edges [E,2] int32 (padded slots = n_nodes), labels [n_nodes] int32."""
-    trash = n_nodes
     labels_ext = jnp.concatenate([labels, jnp.array([-1], jnp.int32)])
-    cu = labels_ext[jnp.minimum(edges[:, 0], trash)]
-    cv = labels_ext[jnp.minimum(edges[:, 1], trash)]
-    valid = (edges[:, 0] != trash) & (edges[:, 1] != trash)
-    m = jnp.sum(valid).astype(jnp.float32)
-
-    # intra edges per community
-    intra = jnp.zeros(n_nodes + 1, jnp.float32)
-    key = jnp.where(valid & (cu == cv), cu, n_nodes)
-    intra = intra.at[key].add(1.0)[:n_nodes]
-
-    # degree per community
-    dcom = jnp.zeros(n_nodes + 1, jnp.float32)
-    dcom = dcom.at[jnp.where(valid, cu, n_nodes)].add(1.0)
-    dcom = dcom.at[jnp.where(valid, cv, n_nodes)].add(1.0)
-    dcom = dcom[:n_nodes]
-
-    return jnp.sum(intra / m - (dcom / (2.0 * m)) ** 2)
+    state = modularity_init(n_nodes)
+    state = _modularity_update_body(state, edges, labels_ext)
+    return _modularity_finalize_body(state)

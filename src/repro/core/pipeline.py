@@ -6,11 +6,15 @@
 plus the paper's second output mode: a *full-graph* ForceAtlas2 layout
 recolored by the detected communities (§4.3).
 
-Every stage is jitted; ``biggraphvis()`` is the single-host driver. The
+Every edge-consuming stage runs through the streaming chunked-edge engine
+(core/stream.py): ``biggraphvis()`` is the single-host driver, processing
+the edge list as one chunk by default and as fixed-size chunks (device
+residency independent of |E|) when given a ``StreamConfig``. The
 multi-device form (edge shards streamed per device; CMS merged by
 all-reduce, labels by all-reduce-min — DESIGN.md §4) is lowered and
 compiled for the production meshes by ``launch/steps.build_bgv_step``
-(the ``biggraphvis`` dry-run cells).
+(the ``biggraphvis`` dry-run cells); ``launch/stream_runner.py`` drives
+the chunked engine with device placement and host prefetch.
 """
 from __future__ import annotations
 
@@ -24,8 +28,8 @@ import numpy as np
 from repro.core import cms as cms_lib
 from repro.core import forceatlas2 as fa2
 from repro.core.coloring import color_groups
-from repro.core.modularity import modularity
 from repro.core.scoda import ScodaConfig, detect_communities
+from repro.core.stream import StreamConfig, StreamStats, stream_pipeline
 from repro.core.supergraph import Supergraph, build_supergraph
 from repro.graph.utils import degrees, mode_degree, pad_edges
 
@@ -50,6 +54,7 @@ class BGVResult:
     n_supernodes: int
     n_superedges: int
     timings: dict = field(default_factory=dict)
+    stream: StreamStats | None = None  # chunked-engine accounting
 
 
 def default_config(
@@ -61,7 +66,6 @@ def default_config(
     s_cap: int | None = None,
 ) -> BGVConfig:
     """Paper defaults: 4 hash rows, cols ≈ 1e-4·|E| (min 256), δ = mode degree."""
-    cols = max(256, int(n_edges * 1e-4) * 1000 // 1000)
     cols = max(256, n_edges // 1000)
     return BGVConfig(
         scoda=ScodaConfig(degree_threshold=degree_threshold, rounds=rounds),
@@ -78,33 +82,14 @@ def _block(fn, *args):
     return out
 
 
-def biggraphvis(edges_np: np.ndarray, n_nodes: int, cfg: BGVConfig) -> BGVResult:
-    """Single-host driver. ``edges_np`` [E,2] int32, unpadded."""
-    t = {}
-    e_cap = len(edges_np)
-    edges = jnp.asarray(pad_edges(edges_np, e_cap, n_nodes))
+def layout_supergraph(sg: Supergraph, cfg: BGVConfig) -> jnp.ndarray:
+    """ForceAtlas2 on the (small, device-resident) supergraph → [s_cap, 2].
 
-    t0 = time.perf_counter()
-    deg = _block(lambda e: degrees(e, n_nodes), edges)
-    labels, _scoda_deg = _block(
-        lambda e: detect_communities(e, n_nodes, cfg.scoda), edges
-    )
-    t["scoda_s"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    sg = _block(
-        lambda e, l, d: build_supergraph(
-            e, l, d, n_nodes, cfg.s_cap, cfg.max_super_edges, cfg.cms
-        ),
-        edges, labels, deg,
-    )
-    t["supergraph_s"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    # Size the layout stage to the LIVE supernode count (padded to a
-    # power of two for shape reuse): laying out the full s_cap padding
-    # would erase the paper's headline speedup — the whole point is that
-    # the supergraph is orders of magnitude smaller than the graph.
+    The layout stage is sized to the LIVE supernode count (padded to a
+    power of two for shape reuse): laying out the full s_cap padding
+    would erase the paper's headline speedup — the whole point is that
+    the supergraph is orders of magnitude smaller than the graph.
+    """
     s_live = max(int(sg.n_supernodes), 2)
     s_layout = 1 << (s_live - 1).bit_length()
     s_layout = min(max(s_layout, 64), cfg.s_cap)
@@ -119,21 +104,50 @@ def biggraphvis(edges_np: np.ndarray, n_nodes: int, cfg: BGVConfig) -> BGVResult
         lambda e, w, m: fa2.layout(e, w, m, s_layout, cfg.layout),
         sedges, sg.weights[:e_layout], mass,
     )
-    pos = jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
+    return jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
+
+
+def biggraphvis(
+    edges_np: np.ndarray,
+    n_nodes: int,
+    cfg: BGVConfig,
+    stream: StreamConfig | None = None,
+    put=jnp.asarray,
+) -> BGVResult:
+    """Single-host driver. ``edges_np`` [E,2] int32, unpadded.
+
+    ``stream=None`` feeds the whole edge list through the engine as a single
+    chunk (the one-shot path); a ``StreamConfig`` streams it in fixed-size
+    chunks so device residency is independent of |E|. Both paths produce
+    identical results (tests/test_stream.py). ``put`` is the host→device
+    transfer for chunk buffers (launch/stream_runner.py passes a sharded
+    device_put).
+    """
+    labels, _gdeg, sg, q, stats = stream_pipeline(
+        edges_np, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap, cfg.max_super_edges,
+        stream, put=put,
+    )
+    t = {
+        "scoda_s": stats.stage_seconds["detect_s"],
+        "supergraph_s": stats.stage_seconds["supergraph_s"],
+    }
+
+    t0 = time.perf_counter()
+    pos = layout_supergraph(sg, cfg)
     t["layout_s"] = time.perf_counter() - t0
 
     groups = color_groups(sg.sizes)
-    q = float(modularity(edges, sg.labels, n_nodes))
     return BGVResult(
         positions=np.asarray(pos),
         sizes=np.asarray(sg.sizes),
         groups=np.asarray(groups),
         labels=np.asarray(sg.labels),
         supergraph=sg,
-        modularity=q,
+        modularity=float(q),
         n_supernodes=int(sg.n_supernodes),
         n_superedges=int(sg.n_superedges),
         timings=t,
+        stream=stats,
     )
 
 

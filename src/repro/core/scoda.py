@@ -69,12 +69,15 @@ class ScodaConfig:
     propagate_jumps: int = 0
 
 
-def _round_threshold(cfg: ScodaConfig, i: int) -> int:
+def round_threshold(cfg: ScodaConfig, i: int) -> int:
     if cfg.threshold_schedule == "paper":
         t = float(cfg.degree_threshold) ** (i + 1)
     else:
         t = float(cfg.degree_threshold) * (cfg.threshold_growth ** i)
     return int(min(t, 2**30))
+
+
+_round_threshold = round_threshold  # back-compat alias
 
 
 def _cumcount_endpoints(u, v, valid):
@@ -158,57 +161,91 @@ def _block_update(state, block, *, threshold, tie_break, degree_update,
     return (new_com, new_deg), None
 
 
-@functools.partial(jax.jit, static_argnames=("n_nodes", "cfg"))
-def detect_communities(edges: jnp.ndarray, n_nodes: int, cfg: ScodaConfig):
-    """Run multi-round block-streamed SCoDA.
+# --------------------------------------------------------------------------
+# Chunk-incremental API (core/stream.py engine): init → update×chunks → finalize.
+# The one-shot ``detect_communities`` below is a thin wrapper that feeds the
+# whole edge list through the same update body as a single chunk, so chunked
+# and one-shot execution are bit-for-bit identical whenever the chunk size is
+# a multiple of ``block_size`` (identical block partition of the stream).
+# --------------------------------------------------------------------------
 
-    edges: [E, 2] int32 (padded slots = n_nodes).
-    Returns (labels [n_nodes] int32 — community = representative node id,
-             deg [n_nodes] int32 — SCoDA working degrees).
+
+def scoda_init(n_nodes: int):
+    """Fresh SCoDA state: (com, deg), each [n_nodes+1] (last slot = trash)."""
+    com = jnp.arange(n_nodes + 1, dtype=jnp.int32)
+    deg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
+    return com, deg
+
+
+def _scoda_update_body(state, chunk, threshold, cfg: ScodaConfig):
+    """One pass of one round over a chunk of the edge stream (jittable).
+
+    ``chunk`` [C,2] int32 with padded slots pointing at the trash node;
+    ``threshold`` may be a python int or a traced int32 scalar. The chunk is
+    scanned in blocks of ``cfg.block_size`` exactly like the one-shot path.
     """
-    e = edges.shape[0]
+    trash = state[0].shape[0] - 1
+    e = chunk.shape[0]
     bs = min(cfg.block_size, e)
     n_blocks = (e + bs - 1) // bs
     pad = n_blocks * bs - e
-    edges_p = jnp.concatenate(
-        [edges, jnp.full((pad, 2), n_nodes, dtype=edges.dtype)], axis=0
+    blocks = jnp.concatenate(
+        [chunk, jnp.full((pad, 2), trash, dtype=chunk.dtype)], axis=0
     ).reshape(n_blocks, bs, 2)
+    step = functools.partial(
+        _block_update,
+        threshold=threshold,
+        tie_break=cfg.tie_break,
+        degree_update=cfg.degree_update,
+        exact_block_degrees=cfg.exact_block_degrees,
+        conflict=cfg.conflict,
+        propagate_jumps=cfg.propagate_jumps,
+    )
+    state, _ = jax.lax.scan(step, state, blocks)
+    return state
 
-    com = jnp.arange(n_nodes + 1, dtype=jnp.int32)
-    deg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
 
-    state = (com, deg)
-    for i in range(cfg.rounds):
-        thr = _round_threshold(cfg, i)
-        step = functools.partial(
-            _block_update,
-            threshold=thr,
-            tie_break=cfg.tie_break,
-            degree_update=cfg.degree_update,
-            exact_block_degrees=cfg.exact_block_degrees,
-            conflict=cfg.conflict,
-            propagate_jumps=cfg.propagate_jumps,
-        )
-        state, _ = jax.lax.scan(step, state, edges_p)
+# Threshold is a traced scalar so all rounds share one executable; state is
+# donated — the engine holds exactly one (com, deg) copy on device.
+scoda_update = functools.partial(jax.jit, static_argnames=("cfg",),
+                                 donate_argnums=(0,))(_scoda_update_body)
+
+
+def _scoda_finalize_body(state, n_nodes: int, cfg: ScodaConfig):
     com, deg = state
-
     if cfg.compress_labels:
         # Pointer jumping: compose the node→representative map to a fixpoint.
-        def body(c):
-            return c[c]
-
         def cond_fn(carry):
             c, it = carry
             return it < 32
 
         def body_fn(carry):
             c, it = carry
-            return body(c), it + 1
+            return c[c], it + 1
 
         # log2(n) pointer jumps always reach the fixpoint; 32 covers any int32 n.
         com, _ = jax.lax.while_loop(cond_fn, body_fn, (com, 0))
-
     return com[:n_nodes], deg[:n_nodes]
+
+
+scoda_finalize = functools.partial(
+    jax.jit, static_argnames=("n_nodes", "cfg")
+)(_scoda_finalize_body)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "cfg"))
+def detect_communities(edges: jnp.ndarray, n_nodes: int, cfg: ScodaConfig):
+    """Run multi-round block-streamed SCoDA (one-shot wrapper over the
+    chunk-incremental API: the whole edge list is a single chunk per round).
+
+    edges: [E, 2] int32 (padded slots = n_nodes).
+    Returns (labels [n_nodes] int32 — community = representative node id,
+             deg [n_nodes] int32 — SCoDA working degrees).
+    """
+    state = scoda_init(n_nodes)
+    for i in range(cfg.rounds):
+        state = _scoda_update_body(state, edges, round_threshold(cfg, i), cfg)
+    return _scoda_finalize_body(state, n_nodes, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("n_labels",))

@@ -1,0 +1,298 @@
+"""Streaming chunked-edge execution engine (paper §3: community information
+extracted "in a few passes on the edge list").
+
+The one-shot pipeline materializes the whole padded edge list on device
+before any stage runs, capping the reproduction at device-memory scale.
+This engine instead keeps the edge list on the host and drives every
+edge-consuming stage over fixed-size chunks:
+
+    host NumPy edge list ──► EdgeChunkStream (padded chunk buffers)
+        ──► per-chunk jitted update steps, state donated
+            (SCoDA labels+degrees · graph degrees · superedge aggregation
+             · modularity accumulators · CMS sketch)
+        ──► finalize: Supergraph + labels, device-resident node-sized state
+
+Device residency is O(n_nodes + chunk_size + max_super_edges + sketch) —
+independent of |E| — so edge lists larger than device memory process in
+``rounds + 1`` passes: rounds SCoDA passes (graph degrees fused into the
+first) plus one fused supergraph-aggregation / modularity pass.
+
+Bit-exactness: every stage's one-shot function is a thin wrapper over the
+same chunk-update body (single chunk = whole list), and the SCoDA block
+partition is preserved because chunk sizes are rounded up to a multiple of
+``ScodaConfig.block_size`` — so chunked and one-shot runs produce identical
+labels, supergraphs, and modularity (see tests/test_stream.py).
+
+This is the single-device engine; ``launch/stream_runner.py`` adds device
+placement/sharding and host prefetch, and is the substrate for the
+multi-device edge-sharded form promised in core/pipeline.py's docstring.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cms as cms_lib
+from repro.core.modularity import modularity_finalize, modularity_init, modularity_update
+from repro.core.scoda import (
+    ScodaConfig,
+    dense_labels,
+    round_threshold,
+    scoda_finalize,
+    scoda_init,
+    scoda_update,
+)
+from repro.core.supergraph import (
+    Supergraph,
+    agg_finalize,
+    agg_init,
+    agg_update,
+    community_sizes,
+)
+
+
+@dataclass(frozen=True)
+class StreamConfig:
+    """Engine knobs. ``chunk_size`` is rounded up to a multiple of the SCoDA
+    block size so the chunked block partition matches the one-shot one."""
+
+    chunk_size: int = 1 << 16  # edges resident on device per chunk
+    prefetch: int = 1  # host→device copies dispatched ahead of compute
+
+
+@dataclass
+class StreamStats:
+    """Per-run accounting; ``peak_device_bytes`` is the analytic resident
+    footprint of the streaming state (chunk buffer + node/sketch/agg state),
+    the number the one-shot path's full edge materialization is compared to."""
+
+    passes: int = 0
+    chunks: int = 0
+    edges_streamed: int = 0
+    seconds: float = 0.0
+    chunk_size: int = 0
+    peak_device_bytes: int = 0
+    stage_seconds: dict = field(default_factory=dict)
+
+    @property
+    def edges_per_s(self) -> float:
+        return self.edges_streamed / self.seconds if self.seconds > 0 else 0.0
+
+
+def tree_bytes(*trees) -> int:
+    """Total bytes of every array leaf across the given pytrees."""
+    total = 0
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if hasattr(leaf, "dtype"):
+                total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total
+
+
+class EdgeChunkStream:
+    """Host-side chunked view over a NumPy edge list.
+
+    Yields [chunk_size, 2] int32 chunks; the tail chunk is padded with the
+    trash node ``n_nodes`` (a no-op for every chunk-update body). The padded
+    tail buffer is allocated once and reused across passes — the host-side
+    analog of a pinned staging buffer. Iterating counts one pass.
+    """
+
+    def __init__(self, edges: np.ndarray, n_nodes: int, chunk_size: int,
+                 block_size: int = 1):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        self.edges = np.ascontiguousarray(edges, dtype=np.int32)
+        self.n_nodes = n_nodes
+        # Round up so chunk boundaries align with SCoDA block boundaries,
+        # and clamp to the padded edge list — a chunk larger than |E| would
+        # only buy a bigger trash-padded buffer.
+        bs = max(1, block_size)
+        self.n_edges = len(self.edges)
+        cap = max(bs, ((self.n_edges + bs - 1) // bs) * bs)
+        self.chunk_size = min(((chunk_size + bs - 1) // bs) * bs, cap)
+        self.n_chunks = max(1, -(-self.n_edges // self.chunk_size))
+        self.passes = 0
+        # The tail chunk is identical every pass, so its padded buffer is
+        # filled once and never mutated — safe even when the host→device
+        # transfer aliases host memory (zero-copy device_put).
+        start = (self.n_chunks - 1) * self.chunk_size
+        self._tail_buf = np.full((self.chunk_size, 2), n_nodes, dtype=np.int32)
+        self._tail_buf[: self.n_edges - start] = self.edges[start:]
+
+    def __len__(self) -> int:
+        return self.n_chunks
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self.chunk_size * 2 * 4
+
+    def __iter__(self):
+        self.passes += 1
+        cs = self.chunk_size
+        for i in range(self.n_chunks - 1):
+            yield self.edges[i * cs:(i + 1) * cs]
+        yield self._tail_buf
+
+
+def _prefetched(stream: EdgeChunkStream, put, depth: int):
+    """Host→device copy dispatched ``depth`` chunks ahead of compute."""
+    if depth <= 0:
+        for chunk in stream:
+            yield put(chunk)
+        return
+    queue = []
+    it = iter(stream)
+    for chunk in it:
+        queue.append(put(chunk))
+        if len(queue) > depth:
+            yield queue.pop(0)
+    yield from queue
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _degree_update(deg, chunk):
+    """Chunk-incremental graph degrees ([n+1] accumulator, trash last)."""
+    deg = deg.at[chunk[:, 0]].add(1)
+    deg = deg.at[chunk[:, 1]].add(1)
+    return deg.at[-1].set(0)
+
+
+def stream_detect(
+    stream: EdgeChunkStream,
+    n_nodes: int,
+    cfg: ScodaConfig,
+    *,
+    put=jnp.asarray,
+    prefetch: int = 1,
+    stats: StreamStats | None = None,
+):
+    """Multi-round SCoDA over the chunk stream; graph degrees are fused into
+    the first pass. Returns (labels [n], scoda_deg [n], graph_deg [n])."""
+    state = scoda_init(n_nodes)
+    gdeg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
+    for r in range(cfg.rounds):
+        thr = jnp.int32(round_threshold(cfg, r))
+        for chunk in _prefetched(stream, put, prefetch):
+            if r == 0:
+                gdeg = _degree_update(gdeg, chunk)
+            state = scoda_update(state, chunk, thr, cfg)
+            if stats is not None:
+                stats.chunks += 1
+                stats.edges_streamed += chunk.shape[0]
+    if stats is not None:
+        stats.passes += cfg.rounds
+        stats.peak_device_bytes = max(
+            stats.peak_device_bytes,
+            tree_bytes(state, gdeg)
+            + stream.chunk_bytes * min(stream.n_chunks, 1 + max(0, prefetch)),
+        )
+    labels, scoda_deg = scoda_finalize(state, n_nodes, cfg)
+    return labels, scoda_deg, gdeg[:n_nodes]
+
+
+def stream_supergraph(
+    stream: EdgeChunkStream,
+    labels: jnp.ndarray,
+    node_deg: jnp.ndarray,
+    n_nodes: int,
+    s_cap: int,
+    max_super_edges: int,
+    cms_cfg: cms_lib.CMSConfig,
+    *,
+    put=jnp.asarray,
+    prefetch: int = 1,
+    stats: StreamStats | None = None,
+    with_modularity: bool = True,
+):
+    """One fused pass: superedge aggregation + modularity accumulation.
+
+    CMS community sizing is node-keyed (one sketch update per node, weight =
+    graph degree) and so needs no edge pass. Returns (Supergraph, Q) with Q
+    None when ``with_modularity`` is false.
+    """
+    labels_dense, n_supernodes = dense_labels(labels, n_nodes)
+    sizes = community_sizes(labels_dense, node_deg, n_supernodes, s_cap, cms_cfg)
+
+    agg_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
+    mod_ext = jnp.concatenate([labels_dense, jnp.array([-1], jnp.int32)])
+    agg = agg_init(s_cap, max_super_edges)
+    mod = modularity_init(n_nodes) if with_modularity else None
+    for chunk in _prefetched(stream, put, prefetch):
+        agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges)
+        if with_modularity:
+            mod = modularity_update(mod, chunk, mod_ext)
+        if stats is not None:
+            stats.chunks += 1
+            stats.edges_streamed += chunk.shape[0]
+    if stats is not None:
+        stats.passes += 1
+        stats.peak_device_bytes = max(
+            stats.peak_device_bytes,
+            tree_bytes(agg, mod, labels_dense, sizes, node_deg)
+            + stream.chunk_bytes * min(stream.n_chunks, 1 + max(0, prefetch)),
+        )
+    sedges, sweights, n_superedges = agg_finalize(agg)
+    q = modularity_finalize(mod) if with_modularity else None
+    sg = Supergraph(
+        edges=sedges,
+        weights=sweights,
+        sizes=sizes,
+        n_supernodes=n_supernodes,
+        n_superedges=n_superedges,
+        labels=labels_dense,
+    )
+    return sg, q
+
+
+def stream_pipeline(
+    edges_np: np.ndarray,
+    n_nodes: int,
+    scoda_cfg: ScodaConfig,
+    cms_cfg: cms_lib.CMSConfig,
+    s_cap: int,
+    max_super_edges: int,
+    stream_cfg: StreamConfig | None = None,
+    *,
+    put=jnp.asarray,
+    with_modularity: bool = True,
+):
+    """Edge stream → (labels, graph degrees, Supergraph, Q, StreamStats).
+
+    The engine's full edge-consuming pipeline; layout/coloring operate on
+    the (small, device-resident) supergraph and stay with the caller.
+    """
+    cfg = stream_cfg or StreamConfig(chunk_size=max(1, len(edges_np)))
+    stream = EdgeChunkStream(
+        edges_np, n_nodes, cfg.chunk_size, block_size=scoda_cfg.block_size
+    )
+    stats = StreamStats(chunk_size=stream.chunk_size)
+    t0 = time.perf_counter()
+    labels, _scoda_deg, gdeg = stream_detect(
+        stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch, stats=stats
+    )
+    jax.block_until_ready(labels)
+    stats.stage_seconds["detect_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sg, q = stream_supergraph(
+        stream, labels, gdeg, n_nodes, s_cap, max_super_edges, cms_cfg,
+        put=put, prefetch=cfg.prefetch, stats=stats,
+        with_modularity=with_modularity,
+    )
+    jax.block_until_ready(sg.edges)
+    stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0
+    stats.seconds = sum(stats.stage_seconds.values())
+    return labels, gdeg, sg, q, stats
+
+
+def oneshot_device_bytes(n_edges: int, n_nodes: int) -> int:
+    """Resident bytes the one-shot path pins just to hold the inputs: the
+    full padded edge list + node-sized state. The streaming engine's
+    ``peak_device_bytes`` replaces the |E| term with one chunk buffer."""
+    return n_edges * 2 * 4 + 2 * (n_nodes + 1) * 4

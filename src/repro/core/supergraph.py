@@ -31,30 +31,61 @@ class Supergraph:
     labels: jnp.ndarray  # [n_nodes] int32 node → dense community id
 
 
-@functools.partial(jax.jit, static_argnames=("s_cap", "max_super_edges"))
-def aggregate_edges(
-    edges: jnp.ndarray,
-    labels_dense: jnp.ndarray,
-    s_cap: int,
-    max_super_edges: int,
-):
-    """Map node edges through community labels, drop intra edges, dedupe.
+# --------------------------------------------------------------------------
+# Chunk-incremental superedge aggregation (core/stream.py engine).
+#
+# State is the *partially aggregated* superedge set: three [cap] arrays
+# (a, b, w) sorted by (a, b) with padded slots at (s_cap, s_cap, 0), plus the
+# live count. Each update maps a chunk of node edges through the community
+# labels, merges it with the state by one lexsort, and segment-sums the
+# multiplicities back into the capacity — so after the final chunk the state
+# IS the deduplicated superedge list, identical to a one-shot aggregation of
+# the full edge list (aggregation is order-independent: a sorted multiset
+# sum). ``aggregate_edges`` is the one-shot wrapper over a single chunk.
+#
+# Capacity overflow (> max_super_edges unique pairs) truncates the sorted
+# tail in both paths; the truncation point then depends on chunk order, so
+# chunked == one-shot is guaranteed only below capacity — same contract as
+# the one-shot path, which also silently drops pairs past the capacity.
+# --------------------------------------------------------------------------
 
-    Returns (sedges [cap,2], sweights [cap], n_superedges).
+
+def agg_init(s_cap: int, max_super_edges: int):
+    """Empty aggregation state: (a [cap], b [cap], w [cap], n_superedges)."""
+    return (
+        jnp.full((max_super_edges,), s_cap, jnp.int32),
+        jnp.full((max_super_edges,), s_cap, jnp.int32),
+        jnp.zeros((max_super_edges,), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def _agg_update_body(state, chunk, labels_ext, s_cap: int, max_super_edges: int):
+    """Merge one edge chunk into the aggregation state (jittable).
+
+    ``chunk`` [C,2] int32 node edges (padded slots point at the trash node);
+    ``labels_ext`` [n_nodes+1] dense community per node with the trash slot
+    mapped to ``s_cap``.
     """
-    trash = labels_dense.shape[0]  # edges padded with n_nodes
-    labels_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
-    cu = labels_ext[jnp.minimum(edges[:, 0], trash)]
-    cv = labels_ext[jnp.minimum(edges[:, 1], trash)]
+    pa, pb, pw, _ = state
+    trash = labels_ext.shape[0] - 1
+    cu = labels_ext[jnp.minimum(chunk[:, 0], trash)]
+    cv = labels_ext[jnp.minimum(chunk[:, 1], trash)]
     a = jnp.minimum(cu, cv)
     b = jnp.maximum(cu, cv)
     valid = (a != b) & (a < s_cap) & (b < s_cap)
     a = jnp.where(valid, a, s_cap)
     b = jnp.where(valid, b, s_cap)
+    w = jnp.where(valid, 1.0, 0.0).astype(jnp.float32)
+
+    # Merge prior partial aggregation with the new chunk and re-dedupe.
+    ca = jnp.concatenate([pa, a])
+    cb = jnp.concatenate([pb, b])
+    cw = jnp.concatenate([pw, w])
 
     # Lexsort by (a, b); invalid slots (s_cap, s_cap) sort last.
-    order = jnp.lexsort((b, a))
-    a_s, b_s = a[order], b[order]
+    order = jnp.lexsort((cb, ca))
+    a_s, b_s, w_s = ca[order], cb[order], cw[order]
     new_pair = jnp.concatenate(
         [jnp.array([True]), (a_s[1:] != a_s[:-1]) | (b_s[1:] != b_s[:-1])]
     )
@@ -62,12 +93,60 @@ def aggregate_edges(
     seg = jnp.cumsum(new_pair) - 1  # dense superedge id per sorted slot (or -1 prefix)
     seg = jnp.where(a_s != s_cap, seg, max_super_edges)
 
-    sw = jnp.zeros(max_super_edges + 1, jnp.float32).at[seg].add(1.0)
-    se = jnp.full((max_super_edges + 1, 2), s_cap, jnp.int32)
-    se = se.at[seg, 0].set(a_s)  # duplicate writes carry identical values
-    se = se.at[seg, 1].set(b_s)
+    sw = jnp.zeros(max_super_edges + 1, jnp.float32).at[seg].add(w_s)
+    sa = jnp.full((max_super_edges + 1,), s_cap, jnp.int32).at[seg].set(a_s)
+    sb = jnp.full((max_super_edges + 1,), s_cap, jnp.int32).at[seg].set(b_s)
     n_superedges = jnp.sum(new_pair).astype(jnp.int32)
-    return se[:max_super_edges], sw[:max_super_edges], n_superedges
+    return (
+        sa[:max_super_edges],
+        sb[:max_super_edges],
+        sw[:max_super_edges],
+        n_superedges,
+    )
+
+
+agg_update = functools.partial(
+    jax.jit, static_argnames=("s_cap", "max_super_edges"), donate_argnums=(0,)
+)(_agg_update_body)
+
+
+def agg_finalize(state):
+    """(sedges [cap,2], sweights [cap], n_superedges) from aggregation state."""
+    a, b, w, n = state
+    return jnp.stack([a, b], axis=1), w, n
+
+
+@functools.partial(jax.jit, static_argnames=("s_cap", "max_super_edges"))
+def aggregate_edges(
+    edges: jnp.ndarray,
+    labels_dense: jnp.ndarray,
+    s_cap: int,
+    max_super_edges: int,
+):
+    """Map node edges through community labels, drop intra edges, dedupe
+    (one-shot wrapper: the whole edge list as a single chunk).
+
+    Returns (sedges [cap,2], sweights [cap], n_superedges).
+    """
+    labels_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
+    state = agg_init(s_cap, max_super_edges)
+    state = _agg_update_body(state, edges, labels_ext, s_cap, max_super_edges)
+    return agg_finalize(state)
+
+
+def community_sizes(
+    labels_dense: jnp.ndarray,
+    node_deg: jnp.ndarray,
+    n_supernodes: jnp.ndarray,
+    s_cap: int,
+    cms_cfg: cms_lib.CMSConfig,
+) -> jnp.ndarray:
+    """CMS-estimated community sizes (paper §4.1): one sketch update per node,
+    weight = its true graph degree; queries beyond the live count are masked."""
+    sketch = cms_lib.init(cms_cfg)
+    sketch = cms_lib.update(sketch, labels_dense, node_deg.astype(jnp.float32), cms_cfg)
+    sizes = cms_lib.query(cms_lib.finalize(sketch), jnp.arange(s_cap, dtype=jnp.int32), cms_cfg)
+    return jnp.where(jnp.arange(s_cap) < n_supernodes, sizes, 0.0)
 
 
 @functools.partial(
@@ -89,12 +168,7 @@ def build_supergraph(
     community id — never an exact counter.
     """
     labels_dense, n_supernodes = dense_labels(labels, n_nodes)
-    # CMS sizing: one update per node, weight = its true graph degree.
-    sketch = cms_lib.init_sketch(cms_cfg)
-    sketch = cms_lib.update(sketch, labels_dense, node_deg.astype(jnp.float32), cms_cfg)
-    sizes = cms_lib.query(sketch, jnp.arange(s_cap, dtype=jnp.int32), cms_cfg)
-    # Mask queries beyond the live community count.
-    sizes = jnp.where(jnp.arange(s_cap) < n_supernodes, sizes, 0.0)
+    sizes = community_sizes(labels_dense, node_deg, n_supernodes, s_cap, cms_cfg)
 
     sedges, sweights, n_superedges = aggregate_edges(
         edges, labels_dense, s_cap, max_super_edges

@@ -17,7 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(h_ref, w_ref, o_ref, *, rows: int, cols: int, blk: int):
@@ -68,7 +70,7 @@ def cms_update_pallas(
         ],
         out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(h_p, w_p)
     return sketch + delta

@@ -1,0 +1,8 @@
+"""Pallas-TPU API compatibility across JAX versions.
+
+jax ≥ 0.5 renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``;
+kernels import the name from here so either version works.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import CompilerParams
 
 EPS = 1e-4
 
@@ -92,7 +94,7 @@ def repulsion_pallas(
         ],
         out_specs=pl.BlockSpec((ti, 2), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 2), pos.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

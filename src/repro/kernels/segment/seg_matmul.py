@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(seg_ref, data_ref, o_ref, *, tn: int, blk: int):
@@ -64,7 +66,7 @@ def segment_sum_pallas(
         ],
         out_specs=pl.BlockSpec((tn, d), lambda t, b: (t, 0)),
         out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -111,7 +111,12 @@ def analyze_hlo(text: str, default_group: int = 16) -> HLOStats:
                 out_elems = 1
                 for d in out_d:
                     out_elems *= d
-                operands = [o.strip().lstrip("%") for o in opm.group(1).split(",")]
+                # Operands print either bare ("%a, %b") or typed
+                # ("f32[32,128]{1,0} %a, ..." — commas inside the dims), so
+                # pull the %-prefixed names rather than splitting on commas.
+                operands = re.findall(r"%([\w.\-]+)", opm.group(1))
+                if not operands:
+                    operands = [o.strip() for o in opm.group(1).split(",")]
                 contract = 1
                 traffic = _nbytes(out_t, out_d)
                 lhs = symbols.get(operands[0]) if operands else None

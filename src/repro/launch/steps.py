@@ -282,7 +282,7 @@ def build_bgv_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
     """The paper's pipeline, distributed: see configs/biggraphvis.py."""
     import repro.core.cms as cms_lib
     from repro.core import forceatlas2 as fa2
-    from repro.core.scoda import _block_update
+    from repro.core.scoda import ScodaConfig, _scoda_update_body
 
     n, e = shape.n_nodes, shape.n_edges
     all_ax = _all_axes(mesh)
@@ -291,17 +291,20 @@ def build_bgv_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
 
     if shape.kind == "bgv_detect":
         cms_cfg = cms_lib.CMSConfig(rows=4, cols=shape.n_out)
+        # The engine's chunk-update body with one block = the whole device
+        # shard: the multi-device analog of core/stream.py's per-chunk step.
+        scoda_cfg = ScodaConfig(
+            degree_threshold=16, rounds=1, block_size=e, tie_break="join",
+            degree_update="scoda", exact_block_degrees=False,
+            conflict="min", propagate_jumps=0,
+        )
 
         def detect_step(com, deg, edges):
             # One streaming round over the device-sharded edge list: each
             # device's scatter lands in the replicated (com, deg) arrays —
             # XLA merges with all-reduce-min / all-reduce-add, the TPU
             # equivalent of the paper's atomics (DESIGN.md §2).
-            (com, deg), _ = _block_update(
-                (com, deg), edges, threshold=16, tie_break="join",
-                degree_update="scoda", exact_block_degrees=False,
-                conflict="min", propagate_jumps=0,
-            )
+            com, deg = _scoda_update_body((com, deg), edges, 16, scoda_cfg)
             sketch = cms_lib.init_sketch(cms_cfg)
             sketch = cms_lib.update(sketch, com[:-1], deg[:-1].astype(jnp.float32), cms_cfg)
             return com, deg, sketch

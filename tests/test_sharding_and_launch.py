@@ -17,15 +17,14 @@ def mesh22():
 
 
 def _mesh_like(shape, names):
-    # an abstract mesh for rule resolution only (no devices needed beyond 1)
-    import numpy as np
-    from jax.sharding import Mesh
-
-    devs = np.array(jax.devices()[:1]).reshape((1,) * len(names))
-    # use jax.sharding.AbstractMesh for pure shape logic
+    # an abstract mesh for rule resolution only (no devices needed):
+    # jax ≥ 0.5 takes (axis_sizes, axis_names), older takes ((name, size), ...)
     from jax.sharding import AbstractMesh
 
-    return AbstractMesh(tuple(shape), tuple(names))
+    try:
+        return AbstractMesh(tuple(shape), tuple(names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
 
 
 def test_spec_for_divisibility_fallback():
