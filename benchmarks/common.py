@@ -5,9 +5,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.graph import planted_partition, powerlaw_graph, mode_degree
+from repro.graph import planted_partition, powerlaw_graph
 
 # CPU-scale stand-ins for the paper's SNAP suite (DESIGN.md §8): same
 # regimes (community-rich, heavy-tailed), sizes runnable on one core.

@@ -1,72 +1,206 @@
-"""Streaming engine vs one-shot: pass count, chunk throughput, peak device
-bytes.
+"""Streaming engine vs one-shot: pass count, throughput, copy/compute
+overlap, and peak device/host bytes — in-memory vs memory-mapped sources,
+prefetch on/off.
 
     PYTHONPATH=src python -m benchmarks.stream_bench
+    PYTHONPATH=src python -m benchmarks.stream_bench --source mmap --quick \
+        --json stream.json
+    PYTHONPATH=src python -m benchmarks.stream_bench --source mmap \
+        --edges edges.npy --nodes 8000
     PYTHONPATH=src python -m benchmarks.run --only stream
 
-CSV rows (name,us_per_call,derived) per the harness contract. For each
-suite graph the one-shot path (whole edge list as a single chunk) is
-compared against the streamed path (chunk size = |E|/8): the streamed run
-must report lower peak device bytes — its residency swaps the full edge
-materialization for chunk buffers — while producing identical labels and
-supergraph.
+CSV rows (name,us_per_call,derived) per the harness contract; ``--json``
+additionally writes the structured records (the CI ``stream-smoke``
+artifact). The streamed chunk size is FIXED (not scaled to |E|), so for
+the mmap source peak host bytes is the staging ring alone — independent
+of |E| — while the in-memory source's host residency is the edge list
+itself. Every streamed run is asserted bit-for-bit identical to the
+one-shot result, and ``copy_stall_s``/``host_fill_s`` quantify how much
+of the run the double-buffered staging pipeline failed to hide.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import tempfile
 from dataclasses import replace
 
 import numpy as np
 
 from benchmarks.common import SUITE, row, time_call
 from repro.core import StreamConfig, biggraphvis, default_config
+from repro.data.edge_store import NpyEdgeStore, write_npy
 from repro.graph import mode_degree
 
+# block_size must divide the chunk for the chunked block partition to match
+# one-shot (bit-exact results); the chunk is fixed so streamed residency —
+# device chunk buffers and, for disk sources, host staging — is a constant,
+# not a function of |E|.
+BLOCK = 2048
+CHUNK = 16384
 
-def bench_graph(name: str, edges: np.ndarray, n: int, rounds: int = 4):
-    e = len(edges)
-    # block_size must divide the chunk for the chunked block partition to
-    # match one-shot (bit-exact results); chunk ≈ |E|/8 → a real multi-chunk
-    # stream on every suite graph.
-    block = 2048
-    chunk = max(block, (e // 8 // block) * block)
+
+def _bench_config(n: int, e: int, edges: np.ndarray, rounds: int):
     cfg = default_config(n, e, mode_degree(edges, n), rounds=rounds, iterations=10)
-    cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=block))
-    scfg = StreamConfig(chunk_size=chunk)
+    return replace(cfg, scoda=replace(cfg.scoda, block_size=BLOCK))
 
-    res_one = biggraphvis(edges, n, cfg)
-    res_str = biggraphvis(edges, n, cfg, stream=scfg)
+
+def _check_match(name: str, res_one, res_str) -> None:
     assert np.array_equal(res_one.labels, res_str.labels), name
     assert np.array_equal(
         np.asarray(res_one.supergraph.edges), np.asarray(res_str.supergraph.edges)
     ), name
-    s_one, s_str = res_one.stream, res_str.stream
-    assert s_str.peak_device_bytes < s_one.peak_device_bytes, (
-        name, s_str.peak_device_bytes, s_one.peak_device_bytes)
+    assert res_one.modularity == res_str.modularity, name
 
+
+def bench_graph(
+    name: str,
+    edges: np.ndarray,
+    n: int,
+    rounds: int = 4,
+    sources: tuple = ("memory", "mmap"),
+    prefetches: tuple = (0, 1),
+    records: list | None = None,
+    mmap_path: str | None = None,
+):
+    """Yield CSV rows (and append structured records) for one suite graph.
+
+    ``mmap_path`` reuses an existing on-disk ``.npy`` for the mmap source
+    instead of writing a temp copy. The in-memory ``edges`` array is still
+    required: the one-shot reference run is what every streamed result is
+    compared against, so this driver is bounded by host memory by design.
+    """
+    e = len(edges)
+    if e <= CHUNK:
+        raise SystemExit(
+            f"{name}: {e} edges fit in one {CHUNK}-row chunk — nothing to "
+            "stream; use a larger graph"
+        )
+    cfg = _bench_config(n, e, edges, rounds)
+    scfg = StreamConfig(chunk_size=CHUNK)
+
+    res_one = biggraphvis(edges, n, cfg)
+    s_one = res_one.stream
     t_one = time_call(lambda: biggraphvis(edges, n, cfg))
-    t_str = time_call(lambda: biggraphvis(edges, n, cfg, stream=scfg))
     yield row(
         f"bgv_oneshot/{name}", t_one,
         f"passes={s_one.passes};chunks={s_one.chunks};"
         f"chunk_size={s_one.chunk_size};peak_bytes={s_one.peak_device_bytes}",
     )
-    yield row(
-        f"bgv_stream/{name}", t_str,
-        f"passes={s_str.passes};chunks={s_str.chunks};"
-        f"chunk_size={s_str.chunk_size};"
-        f"edges_per_s={s_str.edges_per_s:.3e};"
-        f"peak_bytes={s_str.peak_device_bytes}",
-    )
+    if records is not None:
+        records.append({
+            "graph": name, "source": "oneshot", "prefetch": 0,
+            "n_nodes": n, "n_edges": e, "us_per_call": t_one * 1e6,
+            "passes": s_one.passes, "chunk_size": s_one.chunk_size,
+            "peak_device_bytes": s_one.peak_device_bytes,
+            "peak_host_bytes": s_one.peak_host_bytes,
+        })
+
+    with tempfile.TemporaryDirectory() as tmp:
+        for source in sources:
+            if source == "mmap" and mmap_path is None:
+                mmap_path = write_npy(os.path.join(tmp, f"{name}.npy"), edges)
+            for prefetch in prefetches:
+                pcfg = replace(scfg, prefetch=prefetch)
+                src = edges if source == "memory" else NpyEdgeStore(mmap_path)
+                res = biggraphvis(src, n, cfg, stream=pcfg)
+                _check_match(f"{name}/{source}", res_one, res)
+                s = res.stream
+                assert s.peak_device_bytes < s_one.peak_device_bytes, (
+                    name, s.peak_device_bytes, s_one.peak_device_bytes)
+                if source == "mmap":
+                    # out-of-core: host residency is the staging ring alone
+                    assert s.peak_host_bytes <= (prefetch + 2) * s.chunk_size * 8, (
+                        name, s.peak_host_bytes)
+                t = time_call(lambda: biggraphvis(src, n, cfg, stream=pcfg))
+                derived = (
+                    f"passes={s.passes};chunks={s.chunks};"
+                    f"chunk_size={s.chunk_size};"
+                    f"edges_per_s={s.edges_per_s:.3e};"
+                    f"stall_s={s.copy_stall_s:.4f};fill_s={s.host_fill_s:.4f};"
+                    f"peak_bytes={s.peak_device_bytes};"
+                    f"peak_host_bytes={s.peak_host_bytes}"
+                )
+                yield row(f"bgv_stream/{name}/{source}/pf{prefetch}", t, derived)
+                if records is not None:
+                    records.append({
+                        "graph": name, "source": source, "prefetch": prefetch,
+                        "n_nodes": n, "n_edges": e, "us_per_call": t * 1e6,
+                        "passes": s.passes, "chunks": s.chunks,
+                        "chunk_size": s.chunk_size,
+                        "edges_per_s": s.edges_per_s,
+                        "copy_stall_s": s.copy_stall_s,
+                        "host_fill_s": s.host_fill_s,
+                        "peak_device_bytes": s.peak_device_bytes,
+                        "peak_host_bytes": s.peak_host_bytes,
+                    })
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, sources: tuple = ("memory", "mmap"),
+        records: list | None = None):
     names = list(SUITE)[:1] if quick else list(SUITE)
     for name in names:
         builder, n = SUITE[name]
-        yield from bench_graph(name, builder(), n, rounds=2 if quick else 4)
+        yield from bench_graph(
+            name, builder(), n, rounds=2 if quick else 4,
+            sources=sources, prefetches=(0, 1), records=records,
+        )
+
+
+def _check_host_bytes_flat(records: list) -> None:
+    """mmap host residency must not grow with |E| across suite graphs."""
+    by_pf = {}
+    for r in records:
+        if r["source"] == "mmap":
+            by_pf.setdefault(r["prefetch"], set()).add(r["peak_host_bytes"])
+    for pf, vals in by_pf.items():
+        assert len(vals) == 1, f"mmap peak_host_bytes varies with |E|: {vals}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="1 graph / fewer rounds")
+    ap.add_argument("--source", choices=("memory", "mmap", "both"),
+                    default="both")
+    ap.add_argument("--json", default="",
+                    help="also write structured records to this path")
+    ap.add_argument("--edges", default="",
+                    help="bench a converted edge file instead of the suite")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="node count of --edges (required with it)")
+    args = ap.parse_args()
+
+    sources = ("memory", "mmap") if args.source == "both" else (args.source,)
+    records: list = []
+    print("name,us_per_call,derived")
+    if args.edges:
+        if not args.nodes:
+            raise SystemExit("--edges requires --nodes")
+        store = NpyEdgeStore(args.edges)
+        edges = store.read(0, store.n_edges)  # one-shot reference input
+        name = os.path.basename(args.edges)
+        for line in bench_graph(
+            name, edges, args.nodes, rounds=2 if args.quick else 4,
+            sources=sources, prefetches=(0, 1), records=records,
+            mmap_path=args.edges,
+        ):
+            print(line)
+    else:
+        for line in run(quick=args.quick, sources=sources, records=records):
+            print(line)
+        if not args.quick and "mmap" in sources:
+            _check_host_bytes_flat(records)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "bench": "stream_bench",
+                "chunk_rows": CHUNK,
+                "sources": list(sources),
+                "records": records,
+            }, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
 
 
 if __name__ == "__main__":
-    print("name,us_per_call,derived")
-    for line in run():
-        print(line)
+    main()

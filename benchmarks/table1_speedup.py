@@ -11,10 +11,8 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
-
 from benchmarks.common import SUITE, row
-from repro.core import biggraphvis, default_config, modularity
+from repro.core import biggraphvis, default_config
 from repro.core import forceatlas2 as fa2
 from repro.graph import mode_degree, pad_edges
 from repro.graph.utils import degrees

@@ -10,7 +10,7 @@ padding is masked in the losses.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

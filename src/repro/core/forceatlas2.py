@@ -71,7 +71,6 @@ def _attraction(pos, edges, weights, n: int):
 def _pair_force(dpos, mi, mj, kr):
     """kr·mi·mj/d along the unit vector, for a [..., 2] displacement."""
     d2 = jnp.sum(dpos * dpos, axis=-1)
-    d = jnp.sqrt(jnp.maximum(d2, 1e-8))
     mag = kr * mi * mj / jnp.maximum(d2, 1e-4)  # (1/d along unit) = 1/d²·vec
     return mag[..., None] * dpos
 

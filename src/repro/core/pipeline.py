@@ -31,7 +31,7 @@ from repro.core.coloring import color_groups
 from repro.core.scoda import ScodaConfig, detect_communities
 from repro.core.stream import StreamConfig, StreamStats, stream_pipeline
 from repro.core.supergraph import Supergraph, build_supergraph
-from repro.graph.utils import degrees, mode_degree, pad_edges
+from repro.graph.utils import degrees, pad_edges
 
 
 @dataclass(frozen=True)
@@ -108,23 +108,27 @@ def layout_supergraph(sg: Supergraph, cfg: BGVConfig) -> jnp.ndarray:
 
 
 def biggraphvis(
-    edges_np: np.ndarray,
+    source,
     n_nodes: int,
     cfg: BGVConfig,
     stream: StreamConfig | None = None,
-    put=jnp.asarray,
+    put=None,
 ) -> BGVResult:
-    """Single-host driver. ``edges_np`` [E,2] int32, unpadded.
+    """Single-host driver. ``source`` is any engine edge source: an [E,2]
+    unpadded int32 host array, an ``EdgeStore``, or a path to a ``.npy`` /
+    ``.bin`` edge file or shard directory (repro/data/edge_store.py) — the
+    disk-backed forms stream graphs larger than host memory.
 
     ``stream=None`` feeds the whole edge list through the engine as a single
     chunk (the one-shot path); a ``StreamConfig`` streams it in fixed-size
     chunks so device residency is independent of |E|. Both paths produce
-    identical results (tests/test_stream.py). ``put`` is the host→device
-    transfer for chunk buffers (launch/stream_runner.py passes a sharded
-    device_put).
+    identical results whatever the source (tests/test_stream.py,
+    tests/test_edge_store.py). ``put`` is the host→device transfer for
+    chunk buffers (launch/stream_runner.py passes a sharded forced-copy
+    device_put; None selects the engine default for the source).
     """
     labels, _gdeg, sg, q, stats = stream_pipeline(
-        edges_np, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap, cfg.max_super_edges,
+        source, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap, cfg.max_super_edges,
         stream, put=put,
     )
     t = {

@@ -25,7 +25,7 @@ geometrically (δ^i) so larger communities can keep absorbing smaller ones
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +89,6 @@ def _cumcount_endpoints(u, v, valid):
     """
     bs = u.shape[0]
     flat = jnp.stack([u, v], axis=1).reshape(-1)  # [2B] stream order
-    slot = jnp.arange(2 * bs, dtype=jnp.int32)
     order = jnp.argsort(flat, stable=True)
     sorted_vals = flat[order]
     is_start = jnp.concatenate(

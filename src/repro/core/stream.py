@@ -3,10 +3,12 @@ extracted "in a few passes on the edge list").
 
 The one-shot pipeline materializes the whole padded edge list on device
 before any stage runs, capping the reproduction at device-memory scale.
-This engine instead keeps the edge list on the host and drives every
-edge-consuming stage over fixed-size chunks:
+This engine instead keeps the edge list out of device memory and drives
+every edge-consuming stage over fixed-size chunks:
 
-    host NumPy edge list ──► EdgeChunkStream (padded chunk buffers)
+    EdgeStore (host array · mmap .npy/.bin · sharded files)
+        ──► EdgeChunkStream (padded chunk buffers)
+        ──► double-buffered host staging + forced-copy device_put
         ──► per-chunk jitted update steps, state donated
             (SCoDA labels+degrees · graph degrees · superedge aggregation
              · modularity accumulators · CMS sketch)
@@ -14,23 +16,30 @@ edge-consuming stage over fixed-size chunks:
 
 Device residency is O(n_nodes + chunk_size + max_super_edges + sketch) —
 independent of |E| — so edge lists larger than device memory process in
-``rounds + 1`` passes: rounds SCoDA passes (graph degrees fused into the
-first) plus one fused supergraph-aggregation / modularity pass.
+``rounds + 1`` passes. With a disk-backed ``EdgeStore`` (repro/data/
+edge_store.py) *host* residency is also |E|-independent: the only host
+buffers are the staging pair, filled from the store and overwritten in
+place once the in-flight transfer from their previous contents completes
+(``EdgeChunkStream.device_chunks``). The transfer is a forced-copy
+``jax.device_put`` so a staged buffer can never be aliased by the device
+array that compute reads.
 
 Bit-exactness: every stage's one-shot function is a thin wrapper over the
 same chunk-update body (single chunk = whole list), and the SCoDA block
 partition is preserved because chunk sizes are rounded up to a multiple of
 ``ScodaConfig.block_size`` — so chunked and one-shot runs produce identical
-labels, supergraphs, and modularity (see tests/test_stream.py).
+labels, supergraphs, and modularity whatever the source (see
+tests/test_stream.py and tests/test_edge_store.py).
 
 This is the single-device engine; ``launch/stream_runner.py`` adds device
-placement/sharding and host prefetch, and is the substrate for the
-multi-device edge-sharded form promised in core/pipeline.py's docstring.
+placement/sharding, and is the substrate for the multi-device edge-sharded
+form promised in core/pipeline.py's docstring.
 """
 from __future__ import annotations
 
 import functools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -54,6 +63,8 @@ from repro.core.supergraph import (
     agg_update,
     community_sizes,
 )
+from repro.data.edge_store import EDGE_DTYPE, InMemoryEdgeStore, as_edge_store
+from repro.kernels.compat import device_put_copied
 
 
 @dataclass(frozen=True)
@@ -67,9 +78,14 @@ class StreamConfig:
 
 @dataclass
 class StreamStats:
-    """Per-run accounting; ``peak_device_bytes`` is the analytic resident
+    """Per-run accounting. ``peak_device_bytes`` is the analytic resident
     footprint of the streaming state (chunk buffer + node/sketch/agg state),
-    the number the one-shot path's full edge materialization is compared to."""
+    the number the one-shot path's full edge materialization is compared to;
+    ``peak_host_bytes`` is its host-side mirror (edge array + tail buffer
+    in-memory, staging buffers only when disk-backed). ``host_fill_s`` is
+    time spent reading the store into staging; ``copy_stall_s`` is time
+    blocked waiting for an in-flight transfer before a staging buffer could
+    be reused — both ≈ 0 when copies overlap compute."""
 
     passes: int = 0
     chunks: int = 0
@@ -77,6 +93,9 @@ class StreamStats:
     seconds: float = 0.0
     chunk_size: int = 0
     peak_device_bytes: int = 0
+    peak_host_bytes: int = 0
+    host_fill_s: float = 0.0
+    copy_stall_s: float = 0.0
     stage_seconds: dict = field(default_factory=dict)
 
     @property
@@ -95,35 +114,58 @@ def tree_bytes(*trees) -> int:
 
 
 class EdgeChunkStream:
-    """Host-side chunked view over a NumPy edge list.
+    """Chunked view over any edge source (``repro.data.edge_store``).
 
     Yields [chunk_size, 2] int32 chunks; the tail chunk is padded with the
-    trash node ``n_nodes`` (a no-op for every chunk-update body). The padded
-    tail buffer is allocated once and reused across passes — the host-side
-    analog of a pinned staging buffer. Iterating counts one pass.
+    trash node ``n_nodes`` (a no-op for every chunk-update body). The source
+    is validated (dtype/shape) once here, at construction — a float or
+    mis-shaped edge array raises immediately instead of failing deep inside
+    a kernel. Iterating counts one pass.
+
+    Two host-side regimes:
+
+    * in-memory source — chunks are zero-copy slices of the edge array;
+      the padded tail buffer is allocated once and never mutated, so it is
+      safe even when the host→device transfer aliases host memory.
+    * disk-backed source — ``device_chunks`` fills a small ring of
+      persistent staging buffers (the pinned-staging analog; allocated
+      once, reused across chunks and passes) and transfers each with a
+      forced-copy ``device_put``, blocking on a buffer's previous transfer
+      only when the ring wraps. Plain iteration allocates a fresh buffer
+      per chunk instead, since yielded chunks may outlive the next read.
     """
 
-    def __init__(self, edges: np.ndarray, n_nodes: int, chunk_size: int,
+    def __init__(self, source, n_nodes: int, chunk_size: int,
                  block_size: int = 1):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-        self.edges = np.ascontiguousarray(edges, dtype=np.int32)
+        self.store = as_edge_store(source)
         self.n_nodes = n_nodes
+        self.n_edges = self.store.n_edges
         # Round up so chunk boundaries align with SCoDA block boundaries,
         # and clamp to the padded edge list — a chunk larger than |E| would
         # only buy a bigger trash-padded buffer.
         bs = max(1, block_size)
-        self.n_edges = len(self.edges)
         cap = max(bs, ((self.n_edges + bs - 1) // bs) * bs)
         self.chunk_size = min(((chunk_size + bs - 1) // bs) * bs, cap)
         self.n_chunks = max(1, -(-self.n_edges // self.chunk_size))
         self.passes = 0
-        # The tail chunk is identical every pass, so its padded buffer is
-        # filled once and never mutated — safe even when the host→device
-        # transfer aliases host memory (zero-copy device_put).
-        start = (self.n_chunks - 1) * self.chunk_size
-        self._tail_buf = np.full((self.chunk_size, 2), n_nodes, dtype=np.int32)
-        self._tail_buf[: self.n_edges - start] = self.edges[start:]
+        self.edges = (
+            self.store.array if isinstance(self.store, InMemoryEdgeStore) else None
+        )
+        self._staging = None  # lazy ring of reusable disk-path buffers
+        self._inflight = None  # device array whose transfer reads each buffer
+        if self.edges is not None:
+            # The tail chunk is identical every pass, so its padded buffer
+            # is filled once and never mutated — safe even when the
+            # host→device transfer aliases host memory.
+            start = (self.n_chunks - 1) * self.chunk_size
+            self._tail_buf = np.full(
+                (self.chunk_size, 2), n_nodes, dtype=EDGE_DTYPE
+            )
+            self._tail_buf[: self.n_edges - start] = self.edges[start:]
+        else:
+            self._tail_buf = None
 
     def __len__(self) -> int:
         return self.n_chunks
@@ -132,23 +174,113 @@ class EdgeChunkStream:
     def chunk_bytes(self) -> int:
         return self.chunk_size * 2 * 4
 
+    def staging_buffers(self, prefetch: int = 1) -> int:
+        """Host staging buffers the disk path keeps in flight: one being
+        filled plus one per outstanding transfer (0 for in-memory)."""
+        if self.edges is not None:
+            return 0
+        return max(2, prefetch + 1)
+
+    def inflight_buffers(self, prefetch: int = 1) -> int:
+        """Device-side chunk buffers alive at once under ``prefetch``."""
+        if self.edges is not None:
+            live = 1 + max(0, prefetch)  # dispatch-ahead queue + current
+        else:
+            live = max(2, prefetch + 1)  # one per staging-ring slot
+        return min(self.n_chunks, live)
+
+    def host_bytes(self, prefetch: int = 1) -> int:
+        """Host residency of streaming this source: the resident edge array
+        + tail buffer in-memory; just the staging ring when disk-backed."""
+        base = self.store.resident_bytes
+        if self.edges is not None:
+            return base + self._tail_buf.nbytes
+        return base + self.staging_buffers(prefetch) * self.chunk_bytes
+
+    def _read_chunk(self, i: int, buf: np.ndarray) -> np.ndarray:
+        k = self.store.read_into(i * self.chunk_size, buf)
+        if k < self.chunk_size:
+            buf[k:] = self.n_nodes  # pad the tail with the trash node
+        return buf
+
+    def _host_chunks(self):
+        cs = self.chunk_size
+        if self.edges is not None:
+            for i in range(self.n_chunks - 1):
+                yield self.edges[i * cs:(i + 1) * cs]
+            yield self._tail_buf
+        else:
+            for i in range(self.n_chunks):
+                buf = np.empty((cs, 2), dtype=EDGE_DTYPE)
+                yield self._read_chunk(i, buf)
+
     def __iter__(self):
         self.passes += 1
-        cs = self.chunk_size
-        for i in range(self.n_chunks - 1):
-            yield self.edges[i * cs:(i + 1) * cs]
-        yield self._tail_buf
+        return self._host_chunks()
+
+    def device_chunks(self, put=None, prefetch: int = 1,
+                      stats: StreamStats | None = None):
+        """One pass of device-resident chunks, transfers overlapping compute.
+
+        In-memory sources dispatch ``put`` up to ``prefetch`` chunks ahead
+        (chunks are immutable slices, so no staging is needed). Disk-backed
+        sources run the double-buffered pipeline described in the class
+        docstring; their default ``put`` is a forced-copy ``device_put``,
+        and any caller-supplied ``put`` must also copy (StreamRunner's
+        sharded ``put`` does).
+        """
+        self.passes += 1
+        depth = max(0, prefetch)
+        if self.edges is not None:
+            yield from _dispatch_ahead(
+                self._host_chunks(), put or jnp.asarray, depth
+            )
+            return
+
+        put = put or device_put_copied
+        nbuf = self.staging_buffers(depth)
+        if self._staging is None or len(self._staging) < nbuf:
+            self._staging = [
+                np.full((self.chunk_size, 2), self.n_nodes, dtype=EDGE_DTYPE)
+                for _ in range(nbuf)
+            ]
+            self._inflight = [None] * nbuf
+        # In-flight transfers are tracked on the stream, not the generator:
+        # the staging ring persists across passes, so the first fills of a
+        # new pass must still wait out the previous pass's tail transfers
+        # (device_put is asynchronous; CPU only hides this by luck).
+        inflight = self._inflight
+        pending = deque()
+        for i in range(self.n_chunks):
+            b = i % nbuf
+            if inflight[b] is not None:
+                # The ring wrapped: before overwriting this staging buffer,
+                # wait out the transfer that still reads from it.
+                t0 = time.perf_counter()
+                inflight[b].block_until_ready()
+                if stats is not None:
+                    stats.copy_stall_s += time.perf_counter() - t0
+                inflight[b] = None
+            t0 = time.perf_counter()
+            buf = self._read_chunk(i, self._staging[b])
+            if stats is not None:
+                stats.host_fill_s += time.perf_counter() - t0
+            dev = put(buf)
+            inflight[b] = dev
+            pending.append(dev)
+            if len(pending) > depth:
+                yield pending.popleft()
+        yield from pending
 
 
-def _prefetched(stream: EdgeChunkStream, put, depth: int):
+def _dispatch_ahead(chunks, put, depth: int):
     """Host→device copy dispatched ``depth`` chunks ahead of compute."""
     if depth <= 0:
-        for chunk in stream:
+        for chunk in chunks:
             yield put(chunk)
         return
     queue = []
-    it = iter(stream)
-    for chunk in it:
+    for chunk in chunks:
         queue.append(put(chunk))
         if len(queue) > depth:
             yield queue.pop(0)
@@ -163,12 +295,23 @@ def _degree_update(deg, chunk):
     return deg.at[-1].set(0)
 
 
+def _account_pass_peaks(stats, stream, prefetch, *state_trees):
+    stats.peak_device_bytes = max(
+        stats.peak_device_bytes,
+        tree_bytes(*state_trees)
+        + stream.chunk_bytes * stream.inflight_buffers(prefetch),
+    )
+    stats.peak_host_bytes = max(
+        stats.peak_host_bytes, stream.host_bytes(prefetch)
+    )
+
+
 def stream_detect(
     stream: EdgeChunkStream,
     n_nodes: int,
     cfg: ScodaConfig,
     *,
-    put=jnp.asarray,
+    put=None,
     prefetch: int = 1,
     stats: StreamStats | None = None,
 ):
@@ -178,7 +321,7 @@ def stream_detect(
     gdeg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
     for r in range(cfg.rounds):
         thr = jnp.int32(round_threshold(cfg, r))
-        for chunk in _prefetched(stream, put, prefetch):
+        for chunk in stream.device_chunks(put, prefetch, stats):
             if r == 0:
                 gdeg = _degree_update(gdeg, chunk)
             state = scoda_update(state, chunk, thr, cfg)
@@ -187,11 +330,7 @@ def stream_detect(
                 stats.edges_streamed += chunk.shape[0]
     if stats is not None:
         stats.passes += cfg.rounds
-        stats.peak_device_bytes = max(
-            stats.peak_device_bytes,
-            tree_bytes(state, gdeg)
-            + stream.chunk_bytes * min(stream.n_chunks, 1 + max(0, prefetch)),
-        )
+        _account_pass_peaks(stats, stream, prefetch, state, gdeg)
     labels, scoda_deg = scoda_finalize(state, n_nodes, cfg)
     return labels, scoda_deg, gdeg[:n_nodes]
 
@@ -205,7 +344,7 @@ def stream_supergraph(
     max_super_edges: int,
     cms_cfg: cms_lib.CMSConfig,
     *,
-    put=jnp.asarray,
+    put=None,
     prefetch: int = 1,
     stats: StreamStats | None = None,
     with_modularity: bool = True,
@@ -223,7 +362,7 @@ def stream_supergraph(
     mod_ext = jnp.concatenate([labels_dense, jnp.array([-1], jnp.int32)])
     agg = agg_init(s_cap, max_super_edges)
     mod = modularity_init(n_nodes) if with_modularity else None
-    for chunk in _prefetched(stream, put, prefetch):
+    for chunk in stream.device_chunks(put, prefetch, stats):
         agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges)
         if with_modularity:
             mod = modularity_update(mod, chunk, mod_ext)
@@ -232,10 +371,8 @@ def stream_supergraph(
             stats.edges_streamed += chunk.shape[0]
     if stats is not None:
         stats.passes += 1
-        stats.peak_device_bytes = max(
-            stats.peak_device_bytes,
-            tree_bytes(agg, mod, labels_dense, sizes, node_deg)
-            + stream.chunk_bytes * min(stream.n_chunks, 1 + max(0, prefetch)),
+        _account_pass_peaks(
+            stats, stream, prefetch, agg, mod, labels_dense, sizes, node_deg
         )
     sedges, sweights, n_superedges = agg_finalize(agg)
     q = modularity_finalize(mod) if with_modularity else None
@@ -251,7 +388,7 @@ def stream_supergraph(
 
 
 def stream_pipeline(
-    edges_np: np.ndarray,
+    source,
     n_nodes: int,
     scoda_cfg: ScodaConfig,
     cms_cfg: cms_lib.CMSConfig,
@@ -259,17 +396,21 @@ def stream_pipeline(
     max_super_edges: int,
     stream_cfg: StreamConfig | None = None,
     *,
-    put=jnp.asarray,
+    put=None,
     with_modularity: bool = True,
 ):
-    """Edge stream → (labels, graph degrees, Supergraph, Q, StreamStats).
+    """Edge source → (labels, graph degrees, Supergraph, Q, StreamStats).
 
-    The engine's full edge-consuming pipeline; layout/coloring operate on
-    the (small, device-resident) supergraph and stay with the caller.
+    ``source`` is anything ``repro.data.edge_store.as_edge_store`` accepts:
+    a host NumPy array, an ``EdgeStore``, a path to a ``.npy``/``.bin``
+    edge file or shard directory, or a list of shard paths. The engine's
+    full edge-consuming pipeline; layout/coloring operate on the (small,
+    device-resident) supergraph and stay with the caller.
     """
-    cfg = stream_cfg or StreamConfig(chunk_size=max(1, len(edges_np)))
+    store = as_edge_store(source)
+    cfg = stream_cfg or StreamConfig(chunk_size=max(1, store.n_edges))
     stream = EdgeChunkStream(
-        edges_np, n_nodes, cfg.chunk_size, block_size=scoda_cfg.block_size
+        store, n_nodes, cfg.chunk_size, block_size=scoda_cfg.block_size
     )
     stats = StreamStats(chunk_size=stream.chunk_size)
     t0 = time.perf_counter()

@@ -131,7 +131,6 @@ def powerlaw_graph(n: int, m: int = 4, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
     m = max(1, min(m, n - 1))
     # Seed clique on m+1 nodes.
-    seed_nodes = np.arange(m + 1)
     src0, dst0 = np.triu_indices(m + 1, k=1)
     repeated = list(np.concatenate([src0, dst0]))
     edges = [np.stack([src0, dst0], axis=1)]

@@ -1,8 +1,27 @@
-"""Pallas-TPU API compatibility across JAX versions.
+"""API compatibility across JAX versions.
 
-jax ≥ 0.5 renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``;
-kernels import the name from here so either version works.
+- jax ≥ 0.5 renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams``;
+  kernels import the name from here so either version works.
+- ``jax.device_put`` grew ``may_alias``/``donate`` keywords (~0.4.31);
+  ``device_put_copied`` is the forced-copy transfer the double-buffered
+  staging path needs (reused host staging buffers must never be aliased
+  by the device array), degrading gracefully on older jax where CPU
+  ``device_put`` always copies.
 """
+import inspect
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+# Signature probe only — executing a device_put here would initialize the
+# JAX backend as an import side effect of the whole repro.core package.
+_HAS_MAY_ALIAS = "may_alias" in inspect.signature(jax.device_put).parameters
+
+
+def device_put_copied(x, sharding=None):
+    """``jax.device_put`` that is guaranteed not to alias host memory."""
+    if _HAS_MAY_ALIAS:
+        return jax.device_put(x, sharding, may_alias=False, donate=False)
+    return jax.device_put(x, sharding)

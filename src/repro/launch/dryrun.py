@@ -74,7 +74,11 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, out_dir: str,
 
         ma = compiled.memory_analysis()
         print(f"[{arch_name}/{shape_name}/{mesh_kind}] memory_analysis:", ma)
+        # jax < 0.5 returns a one-element list of dicts from cost_analysis;
+        # newer jax returns the dict directly.
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
         print(f"[{arch_name}/{shape_name}/{mesh_kind}] cost_analysis flops:",
               ca.get("flops"), "bytes:", ca.get("bytes accessed"))
         txt = compiled.as_text()

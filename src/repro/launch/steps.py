@@ -19,11 +19,9 @@ from repro.models import sasrec as sas_lib
 from repro.models import transformer as tfm
 from repro.models.param import abstract_params, logical_axes, param_count
 from repro.sharding.rules import (
-    PROFILES,
     filter_spec,
     params_shardings,
     shardings_for_axes,
-    spec_for,
 )
 from repro.train import optimizer as opt
 from repro.train.train_loop import TrainConfig, make_train_step
@@ -82,7 +80,7 @@ def _all_axes(mesh):
 
 def _lm_flops_meta(cfg: tfm.LMConfig, shape: ShapeSpec) -> dict:
     """Analytic MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D for fwd."""
-    d, l = cfg.d_model, cfg.n_layers
+    d, nl = cfg.d_model, cfg.n_layers
     att = d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim \
         + cfg.n_heads * cfg.head_dim * d
     if cfg.moe is None:
@@ -91,16 +89,16 @@ def _lm_flops_meta(cfg: tfm.LMConfig, shape: ShapeSpec) -> dict:
         m = cfg.moe
         mlp = m.top_k * 3 * d * m.d_ff_expert + m.n_shared * 3 * d * m.d_ff_expert \
             + d * m.n_experts
-    n_active = l * (att + mlp) + 2 * d * cfg.vocab_padded
+    n_active = nl * (att + mlp) + 2 * d * cfg.vocab_padded
     tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
     mult = 6 if shape.kind == "train" else 2
     # attention score flops (per token ~ 2·S·H·hd for scores+values)
     s_eff = shape.seq_len
     attn_extra = 2 * 2 * s_eff * cfg.n_heads * cfg.head_dim * (0.5 if shape.kind != "decode" else 1.0)
     return {
-        "model_flops": float(mult * n_active * tokens + mult / 2 * attn_extra * tokens * l),
+        "model_flops": float(mult * n_active * tokens + mult / 2 * attn_extra * tokens * nl),
         "n_params_active": float(n_active),
-        "scan_trip_count": l,
+        "scan_trip_count": nl,
         "tokens": tokens,
     }
 

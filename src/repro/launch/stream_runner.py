@@ -3,28 +3,38 @@
 Owns device placement for the chunk buffers: single-device by default, or
 row-sharded across a mesh's devices (the per-chunk scatter updates then
 merge through XLA's all-reduce — the same collective structure as the
-``bgv_detect`` dry-run cells in launch/steps.py). Host→device copies are
-dispatched ``prefetch`` chunks ahead so the next transfer overlaps the
-current chunk's compute.
+``bgv_detect`` dry-run cells in launch/steps.py). Transfers are forced-copy
+``device_put``s (kernels/compat.py) so the engine's reusable staging
+buffers are never aliased by device arrays, and the engine overlaps them
+with compute via its double-buffered staging ring
+(``EdgeChunkStream.device_chunks``).
 
     PYTHONPATH=src python -m repro.launch.stream_runner \
         --nodes 20000 --communities 200 --chunk 8192 --rounds 4
 
 prints a one-shot vs streamed comparison: identical labels/supergraph,
-pass count, chunk throughput, and peak device bytes.
+pass count, chunk throughput, and peak device bytes. With ``--source
+npy|bin|shards`` the streamed run is driven out-of-core from a converted
+edge file (written to a temp dir via repro/data/edge_store.py), adding
+host-residency and copy/compute-overlap numbers:
+
+    PYTHONPATH=src python -m repro.launch.stream_runner \
+        --nodes 20000 --source npy --chunk 8192
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pipeline import BGVConfig, BGVResult, biggraphvis
 from repro.core.stream import StreamConfig, oneshot_device_bytes
+from repro.data.edge_store import write_bin, write_npy, write_shards
+from repro.kernels.compat import device_put_copied
 
 
 @dataclass(frozen=True)
@@ -38,7 +48,9 @@ class StreamRunner:
 
     ``put`` is handed to the engine as the host→device transfer; with a mesh
     it places each chunk row-sharded over every mesh axis, so each device
-    streams its own slice of the chunk (edge shards, DESIGN.md §4).
+    streams its own slice of the chunk (edge shards, DESIGN.md §4). Either
+    way it copies (never aliases host memory), as the engine's staged disk
+    path requires.
     """
 
     def __init__(self, cfg: BGVConfig, runner_cfg: StreamRunnerConfig | None = None,
@@ -51,16 +63,25 @@ class StreamRunner:
         else:
             self._sharding = None
 
-    def put(self, chunk_np: np.ndarray) -> jnp.ndarray:
-        if self._sharding is not None:
-            return jax.device_put(chunk_np, self._sharding)
-        return jnp.asarray(chunk_np)
+    def put(self, chunk_np: np.ndarray) -> jax.Array:
+        return device_put_copied(chunk_np, self._sharding)
 
-    def run(self, edges_np: np.ndarray, n_nodes: int) -> BGVResult:
+    def run(self, source, n_nodes: int) -> BGVResult:
+        """``source``: host edge array, EdgeStore, or edge-file path."""
         return biggraphvis(
-            edges_np, n_nodes, self.cfg,
+            source, n_nodes, self.cfg,
             stream=self.runner_cfg.stream, put=self.put,
         )
+
+
+def _materialize(edges: np.ndarray, source: str, directory: str):
+    """Write the edge list to the requested on-disk form; returns a path."""
+    if source == "npy":
+        return write_npy(f"{directory}/edges.npy", edges)
+    if source == "bin":
+        return write_bin(f"{directory}/edges.bin", edges)
+    write_shards(f"{directory}/shards", edges, shard_edges=max(1, len(edges) // 5))
+    return f"{directory}/shards"
 
 
 def main() -> None:
@@ -69,10 +90,15 @@ def main() -> None:
     ap.add_argument("--communities", type=int, default=200,
                     help="number of planted communities")
     ap.add_argument("--chunk", type=int, default=8192)
+    ap.add_argument("--prefetch", type=int, default=1)
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=4096)
     ap.add_argument("--iterations", type=int, default=30)
     ap.add_argument("--seed", type=int, default=5)
+    ap.add_argument("--source", choices=("memory", "npy", "bin", "shards"),
+                    default="memory",
+                    help="edge source for the streamed run (non-memory "
+                         "forms are written to a temp dir first)")
     args = ap.parse_args()
 
     from dataclasses import replace
@@ -91,8 +117,14 @@ def main() -> None:
 
     res_one = biggraphvis(edges, n, cfg)
     runner = StreamRunner(cfg, StreamRunnerConfig(
-        stream=StreamConfig(chunk_size=args.chunk)))
-    res_str = runner.run(edges, n)
+        stream=StreamConfig(chunk_size=args.chunk, prefetch=args.prefetch)))
+    with tempfile.TemporaryDirectory() as tmp:
+        if args.source == "memory":
+            res_str = runner.run(edges, n)
+        else:
+            path = _materialize(edges, args.source, tmp)
+            print(f"streaming from {args.source} store: {path}")
+            res_str = runner.run(path, n)
 
     match = (
         np.array_equal(res_one.labels, res_str.labels)
@@ -106,6 +138,10 @@ def main() -> None:
           f"Q={res_str.modularity:.3f}")
     print(f"passes={s.passes} chunks={s.chunks} chunk_size={s.chunk_size} "
           f"throughput={s.edges_per_s / 1e6:.2f}M edges/s")
+    print(f"overlap: host_fill={s.host_fill_s * 1e3:.1f}ms "
+          f"copy_stall={s.copy_stall_s * 1e3:.1f}ms of {s.seconds * 1e3:.1f}ms")
+    print(f"peak host bytes: streamed={s.peak_host_bytes:,} "
+          f"(in-memory edge list={edges.nbytes:,})")
     print(f"peak device bytes: streamed={s.peak_device_bytes:,} "
           f"one-shot={res_one.stream.peak_device_bytes:,} "
           f"(one-shot input residency={oneshot_device_bytes(len(edges), n):,})")

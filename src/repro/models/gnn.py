@@ -13,7 +13,6 @@ padded with the trash id (= n_nodes), which segment_sum drops natively.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any
 
@@ -38,7 +37,7 @@ class GNNConfig:
 
 
 def param_specs(cfg: GNNConfig) -> dict:
-    l, d = cfg.n_layers, cfg.d_hidden
+    nl, d = cfg.n_layers, cfg.d_hidden
     dt = jnp.float32
     specs = {
         "in_w": ParamSpec((cfg.d_feat, d), ("gnn_feat", "gnn_hidden"), "scaled", dt),
@@ -48,32 +47,32 @@ def param_specs(cfg: GNNConfig) -> dict:
     }
     if cfg.arch == "gin":
         specs["layers"] = {
-            "eps": ParamSpec((l,), ("layer",), "zeros", dt),
-            "w1": ParamSpec((l, d, d), ("layer", "gnn_hidden", "gnn_mlp"), "scaled", dt),
-            "b1": ParamSpec((l, d), ("layer", "gnn_mlp"), "zeros", dt),
-            "w2": ParamSpec((l, d, d), ("layer", "gnn_mlp", "gnn_hidden"), "scaled", dt),
-            "b2": ParamSpec((l, d), ("layer", "gnn_hidden"), "zeros", dt),
+            "eps": ParamSpec((nl,), ("layer",), "zeros", dt),
+            "w1": ParamSpec((nl, d, d), ("layer", "gnn_hidden", "gnn_mlp"), "scaled", dt),
+            "b1": ParamSpec((nl, d), ("layer", "gnn_mlp"), "zeros", dt),
+            "w2": ParamSpec((nl, d, d), ("layer", "gnn_mlp", "gnn_hidden"), "scaled", dt),
+            "b2": ParamSpec((nl, d), ("layer", "gnn_hidden"), "zeros", dt),
         }
     elif cfg.arch == "gat":
         h = cfg.n_heads
         dh = d // h
         specs["layers"] = {
-            "w": ParamSpec((l, d, h, dh), ("layer", "gnn_hidden", "heads", "gnn_mlp"), "scaled", dt),
-            "a_src": ParamSpec((l, h, dh), ("layer", "heads", "gnn_mlp"), "scaled", dt),
-            "a_dst": ParamSpec((l, h, dh), ("layer", "heads", "gnn_mlp"), "scaled", dt),
+            "w": ParamSpec((nl, d, h, dh), ("layer", "gnn_hidden", "heads", "gnn_mlp"), "scaled", dt),
+            "a_src": ParamSpec((nl, h, dh), ("layer", "heads", "gnn_mlp"), "scaled", dt),
+            "a_dst": ParamSpec((nl, h, dh), ("layer", "heads", "gnn_mlp"), "scaled", dt),
         }
     else:  # meshgraphnet / graphcast: MPNN with edge + node MLPs
         specs["edge_in_w"] = ParamSpec((2 * d, d), ("gnn_concat", "gnn_hidden"), "scaled", dt)
         specs["edge_in_b"] = ParamSpec((d,), ("gnn_hidden",), "zeros", dt)
         specs["layers"] = {
-            "we1": ParamSpec((l, 3 * d, d), ("layer", "gnn_concat", "gnn_mlp"), "scaled", dt),
-            "be1": ParamSpec((l, d), ("layer", "gnn_mlp"), "zeros", dt),
-            "we2": ParamSpec((l, d, d), ("layer", "gnn_mlp", "gnn_hidden"), "scaled", dt),
-            "be2": ParamSpec((l, d), ("layer", "gnn_hidden"), "zeros", dt),
-            "wv1": ParamSpec((l, 2 * d, d), ("layer", "gnn_concat", "gnn_mlp"), "scaled", dt),
-            "bv1": ParamSpec((l, d), ("layer", "gnn_mlp"), "zeros", dt),
-            "wv2": ParamSpec((l, d, d), ("layer", "gnn_mlp", "gnn_hidden"), "scaled", dt),
-            "bv2": ParamSpec((l, d), ("layer", "gnn_hidden"), "zeros", dt),
+            "we1": ParamSpec((nl, 3 * d, d), ("layer", "gnn_concat", "gnn_mlp"), "scaled", dt),
+            "be1": ParamSpec((nl, d), ("layer", "gnn_mlp"), "zeros", dt),
+            "we2": ParamSpec((nl, d, d), ("layer", "gnn_mlp", "gnn_hidden"), "scaled", dt),
+            "be2": ParamSpec((nl, d), ("layer", "gnn_hidden"), "zeros", dt),
+            "wv1": ParamSpec((nl, 2 * d, d), ("layer", "gnn_concat", "gnn_mlp"), "scaled", dt),
+            "bv1": ParamSpec((nl, d), ("layer", "gnn_mlp"), "zeros", dt),
+            "wv2": ParamSpec((nl, d, d), ("layer", "gnn_mlp", "gnn_hidden"), "scaled", dt),
+            "bv2": ParamSpec((nl, d), ("layer", "gnn_hidden"), "zeros", dt),
         }
     return specs
 

@@ -7,8 +7,7 @@ Everything is a pure function over (params dict, inputs); activations use
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
+import inspect as _inspect
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +19,6 @@ if hasattr(jax, "shard_map"):
     _shard_map = jax.shard_map
 else:
     from jax.experimental.shard_map import shard_map as _shard_map
-
-import inspect as _inspect
 
 _SHMAP_NOCHECK = {
     ("check_vma" if "check_vma" in _inspect.signature(_shard_map).parameters

@@ -11,7 +11,7 @@ is the single source of truth for shapes, init and sharding.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

@@ -12,7 +12,6 @@ Steps lowered per shape cell:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any
 
@@ -35,7 +34,7 @@ class SASRecConfig:
 
 
 def param_specs(cfg: SASRecConfig) -> dict:
-    l, d = cfg.n_blocks, cfg.embed_dim
+    nl, d = cfg.n_blocks, cfg.embed_dim
     dt = jnp.float32
     return {
         # item 0 is the padding item (classic SASRec convention)
@@ -43,16 +42,16 @@ def param_specs(cfg: SASRecConfig) -> dict:
         "pos_embed": ParamSpec((cfg.seq_len, d), (None, "embed"), "normal", dt),
         "final_norm": ParamSpec((d,), ("embed",), "zeros", dt),
         "layers": {
-            "attn_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
-            "wq": ParamSpec((l, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
-            "wk": ParamSpec((l, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
-            "wv": ParamSpec((l, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
-            "wo": ParamSpec((l, cfg.n_heads, d // cfg.n_heads, d), ("layer", "heads", "head_dim", "embed"), "scaled", dt),
-            "ffn_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
-            "w1": ParamSpec((l, d, d), ("layer", "embed", "mlp"), "scaled", dt),
-            "b1": ParamSpec((l, d), ("layer", "mlp"), "zeros", dt),
-            "w2": ParamSpec((l, d, d), ("layer", "mlp", "embed"), "scaled", dt),
-            "b2": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
+            "attn_norm": ParamSpec((nl, d), ("layer", "embed"), "zeros", dt),
+            "wq": ParamSpec((nl, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wk": ParamSpec((nl, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wv": ParamSpec((nl, d, cfg.n_heads, d // cfg.n_heads), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wo": ParamSpec((nl, cfg.n_heads, d // cfg.n_heads, d), ("layer", "heads", "head_dim", "embed"), "scaled", dt),
+            "ffn_norm": ParamSpec((nl, d), ("layer", "embed"), "zeros", dt),
+            "w1": ParamSpec((nl, d, d), ("layer", "embed", "mlp"), "scaled", dt),
+            "b1": ParamSpec((nl, d), ("layer", "mlp"), "zeros", dt),
+            "w2": ParamSpec((nl, d, d), ("layer", "mlp", "embed"), "scaled", dt),
+            "b2": ParamSpec((nl, d), ("layer", "embed"), "zeros", dt),
         },
     }
 

@@ -14,8 +14,7 @@ Design notes
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -83,37 +82,37 @@ def _c(x, s):
 # ------------------------------------------------------------------- params
 
 def param_specs(cfg: LMConfig) -> dict:
-    l, d, h, kv, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    nl, d, h, kv, hd = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = cfg.param_dtype
     specs = {
         "embed": ParamSpec((cfg.vocab_padded, d), ("vocab", "embed"), "normal", dt),
         "final_norm": ParamSpec((d,), ("embed",), "zeros", dt),
         "unembed": ParamSpec((d, cfg.vocab_padded), ("embed", "vocab"), "scaled", dt),
         "layers": {
-            "attn_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
-            "mlp_norm": ParamSpec((l, d), ("layer", "embed"), "zeros", dt),
-            "wq": ParamSpec((l, d, h, hd), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
-            "wk": ParamSpec((l, d, kv, hd), ("layer", "embed", "kv_heads", "head_dim"), "scaled", dt),
-            "wv": ParamSpec((l, d, kv, hd), ("layer", "embed", "kv_heads", "head_dim"), "scaled", dt),
-            "wo": ParamSpec((l, h, hd, d), ("layer", "heads", "head_dim", "embed"), "scaled", dt),
+            "attn_norm": ParamSpec((nl, d), ("layer", "embed"), "zeros", dt),
+            "mlp_norm": ParamSpec((nl, d), ("layer", "embed"), "zeros", dt),
+            "wq": ParamSpec((nl, d, h, hd), ("layer", "embed", "heads", "head_dim"), "scaled", dt),
+            "wk": ParamSpec((nl, d, kv, hd), ("layer", "embed", "kv_heads", "head_dim"), "scaled", dt),
+            "wv": ParamSpec((nl, d, kv, hd), ("layer", "embed", "kv_heads", "head_dim"), "scaled", dt),
+            "wo": ParamSpec((nl, h, hd, d), ("layer", "heads", "head_dim", "embed"), "scaled", dt),
         },
     }
     lyr = specs["layers"]
     if cfg.moe is None:
-        lyr["wi"] = ParamSpec((l, d, cfg.d_ff), ("layer", "embed", "mlp"), "scaled", dt)
-        lyr["wg"] = ParamSpec((l, d, cfg.d_ff), ("layer", "embed", "mlp"), "scaled", dt)
-        lyr["wo_mlp"] = ParamSpec((l, cfg.d_ff, d), ("layer", "mlp", "embed"), "scaled", dt)
+        lyr["wi"] = ParamSpec((nl, d, cfg.d_ff), ("layer", "embed", "mlp"), "scaled", dt)
+        lyr["wg"] = ParamSpec((nl, d, cfg.d_ff), ("layer", "embed", "mlp"), "scaled", dt)
+        lyr["wo_mlp"] = ParamSpec((nl, cfg.d_ff, d), ("layer", "mlp", "embed"), "scaled", dt)
     else:
         m = cfg.moe
-        lyr["router"] = ParamSpec((l, d, m.n_experts), ("layer", "embed", "expert"), "scaled", dt)
-        lyr["we_g"] = ParamSpec((l, m.n_experts, d, m.d_ff_expert), ("layer", "expert", "embed", "mlp"), "scaled", dt)
-        lyr["we_i"] = ParamSpec((l, m.n_experts, d, m.d_ff_expert), ("layer", "expert", "embed", "mlp"), "scaled", dt)
-        lyr["we_o"] = ParamSpec((l, m.n_experts, m.d_ff_expert, d), ("layer", "expert", "mlp", "embed"), "scaled", dt)
+        lyr["router"] = ParamSpec((nl, d, m.n_experts), ("layer", "embed", "expert"), "scaled", dt)
+        lyr["we_g"] = ParamSpec((nl, m.n_experts, d, m.d_ff_expert), ("layer", "expert", "embed", "mlp"), "scaled", dt)
+        lyr["we_i"] = ParamSpec((nl, m.n_experts, d, m.d_ff_expert), ("layer", "expert", "embed", "mlp"), "scaled", dt)
+        lyr["we_o"] = ParamSpec((nl, m.n_experts, m.d_ff_expert, d), ("layer", "expert", "mlp", "embed"), "scaled", dt)
         if m.n_shared:
             f_sh = m.d_ff_expert * m.n_shared
-            lyr["ws_g"] = ParamSpec((l, d, f_sh), ("layer", "embed", "mlp"), "scaled", dt)
-            lyr["ws_i"] = ParamSpec((l, d, f_sh), ("layer", "embed", "mlp"), "scaled", dt)
-            lyr["ws_o"] = ParamSpec((l, f_sh, d), ("layer", "mlp", "embed"), "scaled", dt)
+            lyr["ws_g"] = ParamSpec((nl, d, f_sh), ("layer", "embed", "mlp"), "scaled", dt)
+            lyr["ws_i"] = ParamSpec((nl, d, f_sh), ("layer", "embed", "mlp"), "scaled", dt)
+            lyr["ws_o"] = ParamSpec((nl, f_sh, d), ("layer", "mlp", "embed"), "scaled", dt)
     return specs
 
 
@@ -131,7 +130,7 @@ def _layer(cfg: LMConfig, cons: Constraints, x, lp, layer_idx, positions,
     """One transformer block. If kv_cache is given (decode), returns the
     updated (k, v) slices; else runs self-attention over x."""
     b, s, d = x.shape
-    h = rms = L.rms_norm(x, lp["attn_norm"])
+    rms = L.rms_norm(x, lp["attn_norm"])
     q = jnp.einsum("bsd,dhk->bshk", rms, lp["wq"].astype(x.dtype))
     k = jnp.einsum("bsd,dhk->bshk", rms, lp["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dhk->bshk", rms, lp["wv"].astype(x.dtype))

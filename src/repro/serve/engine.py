@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
-from repro.models.param import init_params
 
 
 @dataclass

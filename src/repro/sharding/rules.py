@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.param import is_spec, logical_axes as spec_axes
+from repro.models.param import is_spec
 
 PROFILES: dict[str, dict[str, tuple[str, ...]]] = {
     "tp": {

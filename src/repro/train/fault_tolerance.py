@@ -21,9 +21,7 @@ from __future__ import annotations
 import os
 import signal
 from dataclasses import dataclass, field
-from typing import Any, Callable
-
-import jax
+from typing import Any
 
 from repro.train import checkpoint as ckpt_lib
 

@@ -6,9 +6,7 @@ optimization trick that lets the 1T-param kimi-k2 cell fit 512×16 GB
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

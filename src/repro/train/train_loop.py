@@ -4,10 +4,9 @@ the DP all-reduce, and a step-time watchdog for straggler detection.
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

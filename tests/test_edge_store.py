@@ -1,0 +1,255 @@
+"""Out-of-core edge stores: write → mmap-read round trips must be
+bit-for-bit identical to the in-memory path through every engine stage
+(labels, supergraph, modularity), including partial final chunks, empty
+shards, and the converter CLI."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import StreamConfig, biggraphvis, default_config
+from repro.core.stream import EdgeChunkStream
+from repro.data.edge_store import (
+    BinEdgeStore,
+    EdgeStoreError,
+    InMemoryEdgeStore,
+    NpyEdgeStore,
+    ShardedEdgeStore,
+    as_edge_store,
+    main as edge_store_cli,
+    open_edge_store,
+    write_bin,
+    write_npy,
+    write_shards,
+)
+from repro.graph import mode_degree, planted_partition
+
+
+@pytest.fixture(scope="module")
+def graph():
+    edges, _ = planted_partition(300, 6, 0.25, 0.005, seed=7)
+    return edges, 300
+
+
+@pytest.fixture(scope="module")
+def stores_dir(tmp_path_factory):
+    return tmp_path_factory.mktemp("edge_stores")
+
+
+def _bgv_config(edges, n):
+    from dataclasses import replace
+
+    cfg = default_config(n, len(edges), max(2, mode_degree(edges, n)),
+                         rounds=3, iterations=10, s_cap=512)
+    return replace(cfg, scoda=replace(cfg.scoda, block_size=64))
+
+
+def _assert_same_result(r1, r2):
+    np.testing.assert_array_equal(r1.labels, r2.labels)
+    np.testing.assert_array_equal(r1.sizes, r2.sizes)
+    np.testing.assert_array_equal(
+        np.asarray(r1.supergraph.edges), np.asarray(r2.supergraph.edges)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r1.supergraph.weights), np.asarray(r2.supergraph.weights)
+    )
+    assert r1.modularity == r2.modularity
+    assert r1.n_supernodes == r2.n_supernodes
+    assert r1.n_superedges == r2.n_superedges
+
+
+# ------------------------------------------------------------- store readers
+
+
+def test_npy_roundtrip_reads_identical(graph, stores_dir):
+    edges, _ = graph
+    path = write_npy(stores_dir / "rt.npy", edges)
+    store = NpyEdgeStore(path)
+    assert store.n_edges == len(edges)
+    assert store.resident_bytes == 0  # page-cache backed, not host-resident
+    np.testing.assert_array_equal(store.read(0, len(edges)), edges)
+    # reads past the tail return only the remaining rows
+    assert len(store.read(len(edges) - 3, 100)) == 3
+
+
+def test_bin_roundtrip_reads_identical(graph, stores_dir):
+    edges, _ = graph
+    path = write_bin(stores_dir / "rt.bin", edges)
+    store = BinEdgeStore(path)
+    assert store.n_edges == len(edges)
+    np.testing.assert_array_equal(store.read(0, len(edges)), edges)
+
+
+def test_sharded_reads_span_boundaries_and_empty_shards(graph, stores_dir):
+    edges, _ = graph
+    d = stores_dir / "mixed_shards"
+    d.mkdir()
+    # uneven shards with an empty one in the middle
+    cuts = [0, 101, 101, 250, len(edges)]
+    paths = []
+    for i in range(len(cuts) - 1):
+        paths.append(write_npy(d / f"shard-{i:05d}.npy", edges[cuts[i]:cuts[i + 1]]))
+    store = open_edge_store(d)
+    assert isinstance(store, ShardedEdgeStore)
+    assert store.n_edges == len(edges)
+    np.testing.assert_array_equal(store.read(0, len(edges)), edges)
+    # a read crossing shard 0 → 2 (through the empty shard 1)
+    np.testing.assert_array_equal(store.read(90, 40), edges[90:130])
+    # per-shard empty store works standalone too
+    empty = NpyEdgeStore(paths[1])
+    assert empty.n_edges == 0
+    assert empty.read(0, 8).shape == (0, 2)
+
+
+def test_write_shards_roundtrip(graph, stores_dir):
+    edges, _ = graph
+    d = stores_dir / "written_shards"
+    paths = write_shards(d, edges, shard_edges=77)
+    assert len(paths) == -(-len(edges) // 77)
+    store = open_edge_store(d)
+    np.testing.assert_array_equal(store.read(0, len(edges)), edges)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(1, 97), st.integers(0, 59))
+def test_property_roundtrip_any_shard_and_read_size(shard_edges, offset):
+    """Property: for any shard split and read offset, sharded mmap reads
+    reconstruct the original rows exactly."""
+    import tempfile
+
+    rng = np.random.default_rng(shard_edges * 64 + offset)
+    edges = rng.integers(0, 200, size=(173, 2)).astype(np.int32)
+    with tempfile.TemporaryDirectory() as d:
+        write_shards(d, edges, shard_edges=shard_edges)
+        store = open_edge_store(d)
+        assert store.n_edges == len(edges)
+        np.testing.assert_array_equal(
+            store.read(offset, len(edges)), edges[offset:]
+        )
+
+
+# ------------------------------------------------- engine-level equivalence
+
+
+def test_bgv_from_mmap_bit_identical(graph, stores_dir):
+    """Acceptance: biggraphvis() driven from a memory-mapped .npy edge file
+    produces bit-for-bit identical labels, supergraph, and modularity."""
+    edges, n = graph
+    cfg = _bgv_config(edges, n)
+    path = write_npy(stores_dir / "bgv.npy", edges)
+    r_mem = biggraphvis(edges, n, cfg, stream=StreamConfig(chunk_size=128))
+    r_mmap = biggraphvis(path, n, cfg, stream=StreamConfig(chunk_size=128))
+    _assert_same_result(r_mem, r_mmap)
+    # host residency of the disk path is the staging ring, not the edge list
+    assert r_mmap.stream.peak_host_bytes < r_mem.stream.peak_host_bytes
+    assert r_mmap.stream.peak_host_bytes == 2 * 128 * 2 * 4
+
+
+def test_bgv_from_bin_and_shards_bit_identical(graph, stores_dir):
+    edges, n = graph
+    cfg = _bgv_config(edges, n)
+    r_mem = biggraphvis(edges, n, cfg, stream=StreamConfig(chunk_size=128))
+    bin_path = write_bin(stores_dir / "bgv.bin", edges)
+    r_bin = biggraphvis(bin_path, n, cfg,
+                        stream=StreamConfig(chunk_size=128, prefetch=2))
+    _assert_same_result(r_mem, r_bin)
+    d = stores_dir / "bgv_shards"
+    write_shards(d, edges, shard_edges=121)
+    r_sh = biggraphvis(str(d), n, cfg,
+                       stream=StreamConfig(chunk_size=128, prefetch=0))
+    _assert_same_result(r_mem, r_sh)
+
+
+def test_partial_final_chunk_padding(graph, stores_dir):
+    """|E| not a multiple of the chunk: the staged tail chunk is padded with
+    the trash node, exactly like the in-memory tail buffer."""
+    edges, n = graph
+    path = write_npy(stores_dir / "tail.npy", edges)
+    st_mem = EdgeChunkStream(edges, n, 97)
+    st_disk = EdgeChunkStream(NpyEdgeStore(path), n, 97)
+    assert st_mem.chunk_size == st_disk.chunk_size
+    assert len(edges) % st_mem.chunk_size != 0  # a genuinely partial tail
+    for a, b in zip(st_mem, st_disk):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_device_chunks_match_host_chunks(graph, stores_dir):
+    edges, n = graph
+    path = write_npy(stores_dir / "dev.npy", edges)
+    st_host = EdgeChunkStream(edges, n, 128)
+    st_dev = EdgeChunkStream(NpyEdgeStore(path), n, 128)
+    host = [np.asarray(c).copy() for c in st_host]
+    # copy: a bare np.asarray view does not keep the device buffer alive
+    # once the loop variable is rebound, so the allocator may reuse it
+    dev = [np.asarray(c).copy() for c in st_dev.device_chunks(prefetch=1)]
+    assert len(host) == len(dev)
+    for a, b in zip(host, dev):
+        np.testing.assert_array_equal(a, b)
+    assert st_dev.passes == 1
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_rejects_float_edges():
+    with pytest.raises(EdgeStoreError, match="integer dtype"):
+        EdgeChunkStream(np.zeros((10, 2), np.float32), 5, 4)
+
+
+def test_rejects_bad_shape():
+    with pytest.raises(EdgeStoreError, match=r"shape \[E, 2\]"):
+        EdgeChunkStream(np.zeros((10, 3), np.int32), 5, 4)
+    with pytest.raises(EdgeStoreError, match=r"shape \[E, 2\]"):
+        InMemoryEdgeStore(np.zeros((4, 2, 2), np.int32))
+
+
+def test_rejects_non_int32_npy_file(stores_dir):
+    path = stores_dir / "wide.npy"
+    np.save(path, np.zeros((10, 2), np.int64))
+    with pytest.raises(EdgeStoreError, match="int32"):
+        NpyEdgeStore(path)
+
+
+def test_rejects_misaligned_bin_file(stores_dir):
+    path = stores_dir / "ragged.bin"
+    path.write_bytes(b"\x00" * 13)
+    with pytest.raises(EdgeStoreError, match="multiple"):
+        BinEdgeStore(path)
+
+
+def test_rejects_unknown_source_type():
+    with pytest.raises(EdgeStoreError, match="edge source"):
+        as_edge_store({"not": "edges"})
+
+
+def test_int64_in_memory_is_converted(graph):
+    edges, n = graph
+    st = as_edge_store(edges.astype(np.int64))
+    assert st.array.dtype == np.int32
+    np.testing.assert_array_equal(st.array, edges)
+
+
+def test_rejects_out_of_int32_range_ids():
+    bad = np.array([[0, 2**31 + 5]], dtype=np.int64)
+    with pytest.raises(EdgeStoreError, match="int32 range"):
+        InMemoryEdgeStore(bad)
+
+
+# ------------------------------------------------------------ converter CLI
+
+
+def test_cli_convert_and_info(graph, stores_dir, capsys):
+    edges, _ = graph
+    src = write_bin(stores_dir / "cli.bin", edges)
+    dst = str(stores_dir / "cli.npy")
+    edge_store_cli(["convert", str(src), dst])
+    np.testing.assert_array_equal(NpyEdgeStore(dst).read(0, len(edges)), edges)
+    edge_store_cli(["info", dst])
+    out = capsys.readouterr().out
+    assert f"{len(edges)} edges" in out
+
+    shard_dir = str(stores_dir / "cli_shards")
+    edge_store_cli(["convert", dst, shard_dir, "--format", "shards",
+                    "--shard-edges", "100"])
+    store = open_edge_store(shard_dir)
+    np.testing.assert_array_equal(store.read(0, len(edges)), edges)

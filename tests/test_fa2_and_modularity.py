@@ -2,7 +2,6 @@
 import networkx as nx
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
 from repro.core import forceatlas2 as fa2
 from repro.core.coloring import color_groups

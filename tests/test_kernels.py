@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
 swept over shapes and dtypes per the deliverable spec."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -3,7 +3,6 @@ restore cycle through the real CLI path) and the layout CLI loader."""
 import os
 
 import numpy as np
-import pytest
 
 from repro.launch.train import run as train_run
 from repro.launch.layout import load_edges

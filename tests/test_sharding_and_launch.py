@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import REGISTRY, get_config, all_cells
+from repro.configs import get_config, all_cells
 from repro.configs.base import input_specs
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.sharding.rules import PROFILES, filter_spec, spec_for

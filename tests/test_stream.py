@@ -16,7 +16,6 @@ from repro.core.scoda import ScodaConfig, detect_communities, dense_labels
 from repro.core.stream import (
     EdgeChunkStream,
     StreamConfig,
-    StreamStats,
     oneshot_device_bytes,
     stream_detect,
     stream_pipeline,
@@ -219,3 +218,29 @@ def test_prefetch_depth_zero_identical(graph):
 
 def test_oneshot_device_bytes_scales_with_edges():
     assert oneshot_device_bytes(10**6, 10**4) > oneshot_device_bytes(10**5, 10**4)
+
+
+def test_memory_path_host_bytes_and_overlap_stats(graph):
+    """In-memory sources pin the edge list on the host and never stage, so
+    fill/stall time stays zero and peak_host_bytes covers the array."""
+    edges, n = graph
+    cfg = _scoda_cfg(edges, n, rounds=2)
+    from repro.core.cms import CMSConfig
+
+    _, _, _, _, stats = stream_pipeline(
+        edges, n, cfg, CMSConfig(rows=4, cols=256), 512, 2048,
+        StreamConfig(chunk_size=128),
+    )
+    assert stats.peak_host_bytes >= edges.size * 4
+    assert stats.host_fill_s == 0.0
+    assert stats.copy_stall_s == 0.0
+
+
+def test_stream_rejects_wrong_dtype_at_construction(graph):
+    """A float edge array must fail up front with a clear message, not deep
+    inside a kernel (and not silently truncate node ids)."""
+    edges, n = graph
+    with pytest.raises(ValueError, match="integer dtype"):
+        EdgeChunkStream(edges.astype(np.float64), n, 128)
+    with pytest.raises(ValueError, match=r"shape \[E, 2\]"):
+        EdgeChunkStream(edges.reshape(-1), n, 128)

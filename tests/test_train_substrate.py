@@ -1,7 +1,6 @@
 """Training substrate: AdamW (fp32 + int8 states), gradient compression,
 microbatch accumulation, checkpoint/restore + elastic resharding,
 preemption handling, straggler watchdog."""
-import functools
 import os
 import signal
 
@@ -174,6 +173,9 @@ def test_watchdog_flags_straggler():
 
     wd = StepWatchdog(threshold=3.0, warmup=2)
     for _ in range(3):
-        wd.start(); time.sleep(0.01); assert not wd.stop()
-    wd.start(); time.sleep(0.08)
+        wd.start()
+        time.sleep(0.01)
+        assert not wd.stop()
+    wd.start()
+    time.sleep(0.08)
     assert wd.stop()
