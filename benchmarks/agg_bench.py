@@ -1,0 +1,188 @@
+"""Per-chunk superedge aggregation: two-level sorted-merge vs lexsort.
+
+Sweeps chunk size × ``max_super_edges`` over a suite graph and times one
+full aggregation pass per ``agg_backend`` (state donated, chunks staged on
+device up front, so the numbers isolate the combine step itself). The
+merge backend replaces the baseline's O((cap+C)·log(cap+C)) re-sort of
+state + chunk with one O(C log C) local dedupe plus an O(cap + C)
+sorted-merge (kernels/merge), so its advantage grows with cap/C.
+
+    PYTHONPATH=src python -m benchmarks.agg_bench
+    PYTHONPATH=src python -m benchmarks.agg_bench --quick --json agg.json
+    PYTHONPATH=src python -m benchmarks.agg_bench --edges edges.npy \\
+        --nodes 8000 --json agg.json --check
+    PYTHONPATH=src python -m benchmarks.run --only agg
+
+CSV rows (name,us_per_call,derived) per the harness contract; ``--json``
+additionally writes the structured records (the CI ``agg-smoke``
+artifact), including a ``speedup`` comparison record per (chunk, cap)
+point. ``--check`` asserts the acceptance bar: merge beats the lexsort
+baseline wherever cap ≥ 8 × chunk. Every merge run's final state is
+asserted bit-for-bit equal to the lexsort run's.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SUITE, row, time_call
+from repro.core.stream import EdgeChunkStream
+from repro.core.supergraph import agg_init, agg_update
+from repro.data.edge_store import NpyEdgeStore
+
+BACKENDS = ("lexsort", "merge")
+S_CAP = 2048
+CHUNKS_FULL = (2048, 8192)
+CAPS_FULL = (8192, 32768, 131072)
+CHUNKS_QUICK = (4096,)
+CAPS_QUICK = (8192, 65536)
+
+
+def _aggregate_pass(chunks, labels_ext, s_cap, cap, backend):
+    state = agg_init(s_cap, cap)
+    for ch in chunks:
+        state = agg_update(state, ch, labels_ext, s_cap, cap, backend)
+    jax.block_until_ready(state)
+    return state
+
+
+def bench_graph(
+    name: str,
+    edges: np.ndarray,
+    n: int,
+    chunk_sizes: tuple,
+    caps: tuple,
+    records: list | None = None,
+):
+    """Yield CSV rows (and append structured records) for one graph."""
+    rng = np.random.default_rng(0)
+    # Aggregation cost is shape-driven (static shapes), not data-driven;
+    # random community labels keep the bench independent of SCoDA.
+    labels_ext = jnp.asarray(
+        np.concatenate([rng.integers(0, S_CAP, n), [S_CAP]]).astype(np.int32)
+    )
+    for chunk_size in chunk_sizes:
+        stream = EdgeChunkStream(edges, n, chunk_size)
+        chunks = [jnp.asarray(np.array(c)) for c in stream]
+        jax.block_until_ready(chunks)
+        for cap in caps:
+            times = {}
+            states = {}
+            for backend in BACKENDS:
+                states[backend] = _aggregate_pass(
+                    chunks, labels_ext, S_CAP, cap, backend
+                )
+                t = time_call(
+                    lambda b=backend: _aggregate_pass(
+                        chunks, labels_ext, S_CAP, cap, b
+                    )
+                )
+                times[backend] = t
+                us_per_chunk = t / len(chunks) * 1e6
+                yield row(
+                    f"agg/{name}/{backend}/C{stream.chunk_size}/cap{cap}",
+                    t,
+                    f"us_per_chunk={us_per_chunk:.1f};chunks={len(chunks)}",
+                )
+                if records is not None:
+                    records.append({
+                        "graph": name, "backend": backend,
+                        "chunk_size": stream.chunk_size, "cap": cap,
+                        "n_edges": len(edges), "n_chunks": len(chunks),
+                        "pass_us": t * 1e6, "us_per_chunk": us_per_chunk,
+                    })
+            for k in range(4):
+                a, b = states["lexsort"][k], states["merge"][k]
+                assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                    name, stream.chunk_size, cap, k)
+            speedup = times["lexsort"] / times["merge"]
+            yield row(
+                f"agg/{name}/speedup/C{stream.chunk_size}/cap{cap}",
+                times["merge"],
+                f"speedup={speedup:.2f};cap_over_chunk="
+                f"{cap / stream.chunk_size:.1f}",
+            )
+            if records is not None:
+                records.append({
+                    "graph": name, "backend": "speedup",
+                    "chunk_size": stream.chunk_size, "cap": cap,
+                    "speedup": speedup,
+                    "cap_over_chunk": cap / stream.chunk_size,
+                })
+
+
+def run(quick: bool = False, records: list | None = None):
+    name = next(iter(SUITE))
+    builder, n = SUITE[name]
+    yield from bench_graph(
+        name, builder(), n,
+        CHUNKS_QUICK if quick else CHUNKS_FULL,
+        CAPS_QUICK if quick else CAPS_FULL,
+        records=records,
+    )
+
+
+def _check_merge_wins(records: list) -> None:
+    """Acceptance bar: merge beats lexsort wherever cap ≥ 8 × chunk."""
+    checked = 0
+    for r in records:
+        if r["backend"] != "speedup" or r["cap_over_chunk"] < 8:
+            continue
+        checked += 1
+        assert r["speedup"] > 1.0, (
+            f"merge slower than lexsort at chunk={r['chunk_size']} "
+            f"cap={r['cap']}: speedup {r['speedup']:.2f}"
+        )
+    assert checked, "no cap ≥ 8×chunk points in the sweep"
+    print(f"check: merge beats lexsort at all {checked} cap≥8×chunk points")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="smaller sweep")
+    ap.add_argument("--json", default="",
+                    help="also write structured records to this path")
+    ap.add_argument("--edges", default="",
+                    help="bench a converted .npy edge file instead of the suite")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="node count of --edges (required with it)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert merge beats lexsort wherever cap ≥ 8×chunk")
+    args = ap.parse_args()
+
+    records: list = []
+    print("name,us_per_call,derived")
+    if args.edges:
+        if not args.nodes:
+            raise SystemExit("--edges requires --nodes")
+        store = NpyEdgeStore(args.edges)
+        edges = store.read(0, store.n_edges)
+        for line in bench_graph(
+            args.edges.rsplit("/", 1)[-1], edges, args.nodes,
+            CHUNKS_QUICK if args.quick else CHUNKS_FULL,
+            CAPS_QUICK if args.quick else CAPS_FULL,
+            records=records,
+        ):
+            print(line)
+    else:
+        for line in run(quick=args.quick, records=records):
+            print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "bench": "agg_bench",
+                "s_cap": S_CAP,
+                "backends": list(BACKENDS),
+                "records": records,
+            }, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        _check_merge_wins(records)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,9 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated module subset")
     args = ap.parse_args()
 
-    from benchmarks import (fig_params, kernels_bench, roofline, stream_bench,
-                            table1_speedup, table2_hashes, table3_rounds)
+    from benchmarks import (agg_bench, fig_params, kernels_bench, roofline,
+                            stream_bench, table1_speedup, table2_hashes,
+                            table3_rounds)
 
     modules = {
         "table1": table1_speedup,
@@ -26,6 +27,7 @@ def main() -> None:
         "figs": fig_params,
         "kernels": kernels_bench,
         "stream": stream_bench,
+        "agg": agg_bench,
         "roofline": roofline,
     }
     if args.only:

@@ -30,6 +30,8 @@ def main() -> None:
     print(f"graph: {n} nodes, {len(edges)} edges, mode degree δ={delta}")
 
     cfg = default_config(n, len(edges), delta, rounds=4, iterations=60, s_cap=4096)
+    # Superedge aggregation runs the two-level sorted-merge backend by
+    # default (StreamConfig.agg_backend="merge"; "lexsort" = old baseline).
     res = biggraphvis(edges, n, cfg)
     print(
         f"BigGraphVis: {res.n_supernodes} supernodes, {res.n_superedges} superedges, "

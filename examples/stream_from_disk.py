@@ -42,7 +42,10 @@ def main() -> None:
         path = write_npy(os.path.join(tmp, "edges.npy"), edges)
         print(f"graph: {n} nodes, {len(edges)} edges -> {path}")
 
-        stream = StreamConfig(chunk_size=8192, prefetch=1)
+        # agg_backend="merge" (the default) aggregates superedges with the
+        # two-level sorted-merge (kernels/merge) instead of re-lexsorting
+        # state + chunk every chunk; "lexsort" restores the baseline.
+        stream = StreamConfig(chunk_size=8192, prefetch=1, agg_backend="merge")
         res_disk = biggraphvis(path, n, cfg, stream=stream)
         res_mem = biggraphvis(edges, n, cfg, stream=stream)
 

@@ -9,6 +9,12 @@ Two step kinds (DESIGN.md §4):
 Shapes mirror the paper's biggest graphs (Table 1): soc-LiveJournal
 (4.0M nodes / 34.7M edges) and web-BerkStan (0.69M / 6.6M), plus the
 supergraph layout at the paper's reported supernode counts.
+
+The streamed form of the detect pass aggregates superedges through
+``StreamConfig.agg_backend`` (core/stream.py): the default ``"merge"``
+two-level sorted-merge (kernels/merge — Pallas on TPU, XLA elsewhere)
+or the ``"lexsort"`` full re-sort baseline; both are bit-identical
+below the superedge capacity.
 """
 from __future__ import annotations
 

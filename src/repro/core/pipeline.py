@@ -123,7 +123,9 @@ def biggraphvis(
     chunk (the one-shot path); a ``StreamConfig`` streams it in fixed-size
     chunks so device residency is independent of |E|. Both paths produce
     identical results whatever the source (tests/test_stream.py,
-    tests/test_edge_store.py). ``put`` is the host→device transfer for
+    tests/test_edge_store.py) and whatever the superedge-aggregation
+    backend (``StreamConfig.agg_backend``: two-level "merge" default vs
+    "lexsort" baseline). ``put`` is the host→device transfer for
     chunk buffers (launch/stream_runner.py passes a sharded forced-copy
     device_put; None selects the engine default for the source).
     """

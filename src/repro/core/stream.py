@@ -11,7 +11,8 @@ every edge-consuming stage over fixed-size chunks:
         ──► double-buffered host staging + forced-copy device_put
         ──► per-chunk jitted update steps, state donated
             (SCoDA labels+degrees · graph degrees · superedge aggregation
-             · modularity accumulators · CMS sketch)
+             — two-level sorted-merge by default, ``StreamConfig.
+             agg_backend`` — · modularity accumulators · CMS sketch)
         ──► finalize: Supergraph + labels, device-resident node-sized state
 
 Device residency is O(n_nodes + chunk_size + max_super_edges + sketch) —
@@ -70,10 +71,18 @@ from repro.kernels.compat import device_put_copied
 @dataclass(frozen=True)
 class StreamConfig:
     """Engine knobs. ``chunk_size`` is rounded up to a multiple of the SCoDA
-    block size so the chunked block partition matches the one-shot one."""
+    block size so the chunked block partition matches the one-shot one.
+    ``agg_backend`` selects the superedge-aggregation algorithm ("merge" =
+    two-level sorted-merge via kernels/merge, "lexsort" = full re-sort
+    baseline; bit-identical below capacity — core/supergraph.py).
+    ``time_agg`` blocks on every aggregation update to fill the per-chunk
+    ``StreamStats`` aggregation timing (costs copy/compute overlap; leave
+    off outside benchmarks)."""
 
     chunk_size: int = 1 << 16  # edges resident on device per chunk
     prefetch: int = 1  # host→device copies dispatched ahead of compute
+    agg_backend: str = "merge"  # superedge aggregation: "merge" | "lexsort"
+    time_agg: bool = False  # per-chunk aggregation timing in StreamStats
 
 
 @dataclass
@@ -85,7 +94,10 @@ class StreamStats:
     in-memory, staging buffers only when disk-backed). ``host_fill_s`` is
     time spent reading the store into staging; ``copy_stall_s`` is time
     blocked waiting for an in-flight transfer before a staging buffer could
-    be reused — both ≈ 0 when copies overlap compute."""
+    be reused — both ≈ 0 when copies overlap compute. ``agg_update_s`` /
+    ``agg_chunks`` are the blocking per-chunk superedge-aggregation timing,
+    populated only under ``StreamConfig.time_agg`` (benchmarks/agg_bench.py
+    compares them across ``agg_backend`` values)."""
 
     passes: int = 0
     chunks: int = 0
@@ -96,6 +108,8 @@ class StreamStats:
     peak_host_bytes: int = 0
     host_fill_s: float = 0.0
     copy_stall_s: float = 0.0
+    agg_update_s: float = 0.0
+    agg_chunks: int = 0
     stage_seconds: dict = field(default_factory=dict)
 
     @property
@@ -348,12 +362,15 @@ def stream_supergraph(
     prefetch: int = 1,
     stats: StreamStats | None = None,
     with_modularity: bool = True,
+    agg_backend: str = "merge",
+    time_agg: bool = False,
 ):
     """One fused pass: superedge aggregation + modularity accumulation.
 
     CMS community sizing is node-keyed (one sketch update per node, weight =
     graph degree) and so needs no edge pass. Returns (Supergraph, Q) with Q
-    None when ``with_modularity`` is false.
+    None when ``with_modularity`` is false. ``agg_backend``/``time_agg``
+    are the ``StreamConfig`` aggregation knobs (see its docstring).
     """
     labels_dense, n_supernodes = dense_labels(labels, n_nodes)
     sizes = community_sizes(labels_dense, node_deg, n_supernodes, s_cap, cms_cfg)
@@ -363,7 +380,14 @@ def stream_supergraph(
     agg = agg_init(s_cap, max_super_edges)
     mod = modularity_init(n_nodes) if with_modularity else None
     for chunk in stream.device_chunks(put, prefetch, stats):
-        agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges)
+        if time_agg and stats is not None:
+            t0 = time.perf_counter()
+            agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges, agg_backend)
+            jax.block_until_ready(agg)
+            stats.agg_update_s += time.perf_counter() - t0
+            stats.agg_chunks += 1
+        else:
+            agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges, agg_backend)
         if with_modularity:
             mod = modularity_update(mod, chunk, mod_ext)
         if stats is not None:
@@ -425,6 +449,7 @@ def stream_pipeline(
         stream, labels, gdeg, n_nodes, s_cap, max_super_edges, cms_cfg,
         put=put, prefetch=cfg.prefetch, stats=stats,
         with_modularity=with_modularity,
+        agg_backend=cfg.agg_backend, time_agg=cfg.time_agg,
     )
     jax.block_until_ready(sg.edges)
     stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0

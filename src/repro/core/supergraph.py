@@ -1,9 +1,11 @@
 """Supergraph construction (paper §4.1): communities → weighted supernodes,
 inter-community edges → weighted superedges.
 
-Static-shape implementation: superedges are deduplicated by lexsorting the
-canonicalized (min,max) community pairs and segment-summing multiplicities
-into a fixed ``max_super_edges`` capacity. All jittable.
+Static-shape implementation: superedges are deduplicated into a fixed
+``max_super_edges`` capacity, kept sorted by canonicalized (min, max)
+community pair. Two jittable aggregation backends share the contract
+(``agg_backend``): the original ``"lexsort"`` full re-sort, and the
+default ``"merge"`` two-level scheme built on ``kernels/merge``.
 """
 from __future__ import annotations
 
@@ -15,8 +17,8 @@ import jax.numpy as jnp
 
 from repro.core import cms as cms_lib
 from repro.core.scoda import dense_labels
-
-INT32_MAX = jnp.iinfo(jnp.int32).max
+from repro.kernels.merge import ops as merge_ops
+from repro.kernels.merge.ref import SENTINEL, pack_keys, unpack_keys
 
 
 @dataclass
@@ -35,18 +37,37 @@ class Supergraph:
 # Chunk-incremental superedge aggregation (core/stream.py engine).
 #
 # State is the *partially aggregated* superedge set: three [cap] arrays
-# (a, b, w) sorted by (a, b) with padded slots at (s_cap, s_cap, 0), plus the
-# live count. Each update maps a chunk of node edges through the community
-# labels, merges it with the state by one lexsort, and segment-sums the
-# multiplicities back into the capacity — so after the final chunk the state
-# IS the deduplicated superedge list, identical to a one-shot aggregation of
-# the full edge list (aggregation is order-independent: a sorted multiset
+# (a, b, w) sorted by (a, b) with padded slots at (s_cap, s_cap, 0), plus
+# the live count. Each update maps a chunk of node edges through the
+# community labels and combines it into the state through one of two
+# backends that keep the sorted-state invariant (``agg_backend``):
+#
+#   * "merge" (default) — two-level scheme: (1) the persistent state stays
+#     sorted by (a, b); (2) the incoming chunk is deduped *locally*, one
+#     sort of only the C chunk entries; (3) the deduped run merges into the
+#     state by the ``kernels/merge`` sorted-merge-and-combine kernel, whose
+#     ranks are binary searches because both runs are already sorted —
+#     O(C log C + cap + C) per chunk.
+#   * "lexsort" — the original baseline: concatenate state + chunk, one
+#     full lexsort, segment-sum back into capacity — O((cap + C)·
+#     log(cap + C)) per chunk.
+#
+# Both are bit-for-bit identical below capacity (weights are edge counts,
+# exactly representable, and both keep the same sorted layout), and both
+# skip all-invalid chunks (every edge intra-community or trash-padded)
+# without touching the state. After the final chunk the state IS the
+# deduplicated superedge list, identical to a one-shot aggregation of the
+# full edge list (aggregation is order-independent: a sorted multiset
 # sum). ``aggregate_edges`` is the one-shot wrapper over a single chunk.
 #
 # Capacity overflow (> max_super_edges unique pairs) truncates the sorted
-# tail in both paths; the truncation point then depends on chunk order, so
-# chunked == one-shot is guaranteed only below capacity — same contract as
-# the one-shot path, which also silently drops pairs past the capacity.
+# tail in both backends — every update keeps the lexicographically
+# smallest ``cap`` pairs and drops the weight of the rest, while
+# ``n_superedges`` still counts every unique pair of the latest update's
+# union. The truncation point then depends on chunk order, so chunked ==
+# one-shot is guaranteed only below capacity (the backends still agree
+# with *each other* for any fixed chunk sequence; see
+# tests/test_supergraph.py overflow-contract tests).
 # --------------------------------------------------------------------------
 
 
@@ -60,14 +81,13 @@ def agg_init(s_cap: int, max_super_edges: int):
     )
 
 
-def _agg_update_body(state, chunk, labels_ext, s_cap: int, max_super_edges: int):
-    """Merge one edge chunk into the aggregation state (jittable).
+def _chunk_pairs(chunk, labels_ext, s_cap: int):
+    """Map node edges → canonical community pairs; invalid → (s_cap, s_cap, 0).
 
     ``chunk`` [C,2] int32 node edges (padded slots point at the trash node);
     ``labels_ext`` [n_nodes+1] dense community per node with the trash slot
     mapped to ``s_cap``.
     """
-    pa, pb, pw, _ = state
     trash = labels_ext.shape[0] - 1
     cu = labels_ext[jnp.minimum(chunk[:, 0], trash)]
     cv = labels_ext[jnp.minimum(chunk[:, 1], trash)]
@@ -77,8 +97,12 @@ def _agg_update_body(state, chunk, labels_ext, s_cap: int, max_super_edges: int)
     a = jnp.where(valid, a, s_cap)
     b = jnp.where(valid, b, s_cap)
     w = jnp.where(valid, 1.0, 0.0).astype(jnp.float32)
+    return a, b, w
 
-    # Merge prior partial aggregation with the new chunk and re-dedupe.
+
+def _agg_update_lexsort(state, a, b, w, s_cap: int, max_super_edges: int):
+    """Baseline: one full lexsort of state + chunk, segment-sum re-dedupe."""
+    pa, pb, pw, _ = state
     ca = jnp.concatenate([pa, a])
     cb = jnp.concatenate([pb, b])
     cw = jnp.concatenate([pw, w])
@@ -105,8 +129,69 @@ def _agg_update_body(state, chunk, labels_ext, s_cap: int, max_super_edges: int)
     )
 
 
+def _dedupe_chunk(a, b, w, s_cap: int):
+    """Level one of the merge scheme: sort + combine only the C chunk pairs.
+
+    Returns (ca, cb, cw): a sorted run of the chunk's unique valid pairs
+    with summed multiplicities, padded with (s_cap, s_cap, 0) slots.
+    """
+    c = a.shape[0]
+    key = pack_keys(a, b, s_cap)
+    order = jnp.argsort(key)
+    k_s, w_s = key[order], w[order]
+    first = jnp.concatenate([jnp.array([True]), k_s[1:] != k_s[:-1]])
+    first = first & (k_s != SENTINEL)
+    seg = jnp.cumsum(first) - 1  # dense local id per sorted slot (or -1 prefix)
+    seg = jnp.where(k_s != SENTINEL, seg, c)
+    cw = jnp.zeros((c + 1,), jnp.float32).at[seg].add(w_s)
+    ck = jnp.full((c + 1,), SENTINEL, jnp.uint32).at[seg].set(k_s)
+    ca, cb = unpack_keys(ck[:c], s_cap)
+    return ca, cb, cw[:c]
+
+
+def _agg_update_merge(state, a, b, w, s_cap: int, kernel_backend: str):
+    """Two-level scheme: local chunk dedupe, then sorted-merge into state."""
+    pa, pb, pw, _ = state
+    ca, cb, cw = _dedupe_chunk(a, b, w, s_cap)
+    return merge_ops.merge_combine(
+        pa, pb, pw, ca, cb, cw, s_cap, backend=kernel_backend
+    )
+
+
+def _agg_update_body(
+    state,
+    chunk,
+    labels_ext,
+    s_cap: int,
+    max_super_edges: int,
+    agg_backend: str = "merge",
+    kernel_backend: str = "auto",
+):
+    """Combine one edge chunk into the aggregation state (jittable).
+
+    ``agg_backend`` selects the combine algorithm ("merge" default,
+    "lexsort" baseline — bit-identical below capacity); ``kernel_backend``
+    is forwarded to ``kernels/merge/ops.py`` on the merge path.
+    """
+    a, b, w = _chunk_pairs(chunk, labels_ext, s_cap)
+    if agg_backend == "lexsort":
+        def run(st):
+            return _agg_update_lexsort(st, a, b, w, s_cap, max_super_edges)
+    elif agg_backend == "merge":
+        def run(st):
+            return _agg_update_merge(st, a, b, w, s_cap, kernel_backend)
+    else:
+        raise ValueError(f"unknown agg_backend {agg_backend!r}")
+    # An all-invalid chunk (every edge intra-community or trash-padded)
+    # is a no-op for any backend: short-circuit it instead of paying a
+    # full state rewrite.
+    return jax.lax.cond(jnp.any(a != s_cap), run, lambda st: st, state)
+
+
 agg_update = functools.partial(
-    jax.jit, static_argnames=("s_cap", "max_super_edges"), donate_argnums=(0,)
+    jax.jit,
+    static_argnames=("s_cap", "max_super_edges", "agg_backend", "kernel_backend"),
+    donate_argnums=(0,),
 )(_agg_update_body)
 
 
@@ -116,12 +201,15 @@ def agg_finalize(state):
     return jnp.stack([a, b], axis=1), w, n
 
 
-@functools.partial(jax.jit, static_argnames=("s_cap", "max_super_edges"))
+@functools.partial(
+    jax.jit, static_argnames=("s_cap", "max_super_edges", "agg_backend")
+)
 def aggregate_edges(
     edges: jnp.ndarray,
     labels_dense: jnp.ndarray,
     s_cap: int,
     max_super_edges: int,
+    agg_backend: str = "merge",
 ):
     """Map node edges through community labels, drop intra edges, dedupe
     (one-shot wrapper: the whole edge list as a single chunk).
@@ -130,7 +218,9 @@ def aggregate_edges(
     """
     labels_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
     state = agg_init(s_cap, max_super_edges)
-    state = _agg_update_body(state, edges, labels_ext, s_cap, max_super_edges)
+    state = _agg_update_body(
+        state, edges, labels_ext, s_cap, max_super_edges, agg_backend
+    )
     return agg_finalize(state)
 
 
@@ -150,7 +240,8 @@ def community_sizes(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_nodes", "s_cap", "max_super_edges", "cms_cfg")
+    jax.jit,
+    static_argnames=("n_nodes", "s_cap", "max_super_edges", "cms_cfg", "agg_backend"),
 )
 def build_supergraph(
     edges: jnp.ndarray,
@@ -160,6 +251,7 @@ def build_supergraph(
     s_cap: int,
     max_super_edges: int,
     cms_cfg: cms_lib.CMSConfig,
+    agg_backend: str = "merge",
 ) -> Supergraph:
     """Full paper path: dense-relabel communities, CMS-size them, dedupe edges.
 
@@ -171,7 +263,7 @@ def build_supergraph(
     sizes = community_sizes(labels_dense, node_deg, n_supernodes, s_cap, cms_cfg)
 
     sedges, sweights, n_superedges = aggregate_edges(
-        edges, labels_dense, s_cap, max_super_edges
+        edges, labels_dense, s_cap, max_super_edges, agg_backend
     )
     return Supergraph(
         edges=sedges,

@@ -93,6 +93,10 @@ def main() -> None:
     ap.add_argument("--prefetch", type=int, default=1)
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=4096)
+    ap.add_argument("--agg-backend", choices=("merge", "lexsort"),
+                    default="merge",
+                    help="superedge aggregation: two-level sorted-merge "
+                         "(kernels/merge) or the lexsort re-sort baseline")
     ap.add_argument("--iterations", type=int, default=30)
     ap.add_argument("--seed", type=int, default=5)
     ap.add_argument("--source", choices=("memory", "npy", "bin", "shards"),
@@ -117,7 +121,8 @@ def main() -> None:
 
     res_one = biggraphvis(edges, n, cfg)
     runner = StreamRunner(cfg, StreamRunnerConfig(
-        stream=StreamConfig(chunk_size=args.chunk, prefetch=args.prefetch)))
+        stream=StreamConfig(chunk_size=args.chunk, prefetch=args.prefetch,
+                            agg_backend=args.agg_backend)))
     with tempfile.TemporaryDirectory() as tmp:
         if args.source == "memory":
             res_str = runner.run(edges, n)

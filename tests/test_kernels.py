@@ -14,6 +14,9 @@ from repro.kernels.repulsion import ops as rep_ops
 from repro.kernels.segment.seg_matmul import segment_sum_pallas
 from repro.kernels.segment.ref import segment_sum_ref
 from repro.kernels.segment import ops as seg_ops
+from repro.kernels.merge.ref import merge_combine_ref
+from repro.kernels.merge.sorted_merge import merge_combine_pallas
+from repro.kernels.merge import ops as merge_ops
 
 
 # ---------------------------------------------------------------- repulsion
@@ -125,3 +128,149 @@ def test_segment_ops_wrapper():
     a = seg_ops.segment_sum(data, seg, 50, backend="ref")
     b = seg_ops.segment_sum(data, seg, 50, backend="interpret")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------- sorted-merge-combine
+
+def _sorted_run(pairs: dict, size: int, s_cap: int):
+    """{(a, b): w} → (a [size], b [size], w [size]) sorted, trash-padded."""
+    items = sorted(pairs.items())
+    assert len(items) <= size
+    a = np.full(size, s_cap, np.int32)
+    b = np.full(size, s_cap, np.int32)
+    w = np.zeros(size, np.float32)
+    for i, ((x, y), ww) in enumerate(items):
+        a[i], b[i], w[i] = x, y, ww
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(w)
+
+
+def _rand_pairs(rng, k: int, s_cap: int, max_w: int = 5) -> dict:
+    pairs = {}
+    while len(pairs) < k:
+        x, y = sorted(rng.choice(s_cap, size=2, replace=False))
+        pairs[(int(x), int(y))] = float(rng.integers(1, max_w + 1))
+    return pairs
+
+
+def _merge_oracle(state: dict, chunk: dict, cap: int):
+    union = dict(state)
+    for p, w in chunk.items():
+        union[p] = union.get(p, 0) + w
+    kept = dict(sorted(union.items())[:cap])
+    return kept, len(union)
+
+
+def _assert_merge_outputs_equal(got, want, label=""):
+    for x, y in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=label)
+
+
+@pytest.mark.parametrize("cap,c,ks,kc,tn,blk", [
+    (64, 16, 20, 10, 64, 64),
+    (256, 64, 200, 64, 64, 128),
+    (100, 24, 77, 20, 32, 64),  # cap/C not tile-aligned: exercises padding
+])
+def test_merge_kernel_vs_ref(cap, c, ks, kc, tn, blk):
+    rng = np.random.default_rng(cap + c)
+    s_cap = 32
+    state = _rand_pairs(rng, ks, s_cap)
+    chunk = _rand_pairs(rng, kc, s_cap)
+    sa, sb, sw = _sorted_run(state, cap, s_cap)
+    ca, cb, cw = _sorted_run(chunk, c, s_cap)
+    want = merge_combine_ref(sa, sb, sw, ca, cb, cw, s_cap)
+    got = merge_combine_pallas(
+        sa, sb, sw, ca, cb, cw, s_cap, tn=tn, blk=blk, interpret=True
+    )
+    _assert_merge_outputs_equal(got, want)
+    # and both match the python oracle
+    kept, n = _merge_oracle(state, chunk, cap)
+    oa, ob, ow, n_out = want
+    assert int(n_out) == n
+    got_pairs = {
+        (int(a), int(b)): float(w)
+        for a, b, w in zip(np.asarray(oa), np.asarray(ob), np.asarray(ow))
+        if a < s_cap
+    }
+    assert got_pairs == kept
+
+
+@pytest.mark.parametrize("case", [
+    "empty_chunk", "all_duplicate", "all_padding_state_too",
+    "state_at_capacity", "chunk_below_state", "chunk_above_state",
+])
+def test_merge_kernel_adversarial(case):
+    """Pallas-interpret vs ref on the contract's edge cases."""
+    rng = np.random.default_rng(7)
+    s_cap, cap, c = 16, 32, 16
+    state = _rand_pairs(rng, 12, s_cap)
+    if case == "empty_chunk":
+        chunk = {}
+    elif case == "all_duplicate":
+        chunk = {p: 1.0 for p in list(state)[:c]}  # every pair already held
+    elif case == "all_padding_state_too":
+        state, chunk = {}, {}
+    elif case == "state_at_capacity":
+        state = _rand_pairs(rng, cap, s_cap)  # no free slot: pure overflow
+        chunk = _rand_pairs(rng, c, s_cap)
+    elif case == "chunk_below_state":
+        state = {(8, j): 1.0 for j in range(9, 16)}
+        chunk = {(0, j): 2.0 for j in range(1, 8)}  # all keys sort first
+    else:  # chunk_above_state
+        state = {(0, j): 1.0 for j in range(1, 8)}
+        chunk = {(8, j): 2.0 for j in range(9, 16)}
+    sa, sb, sw = _sorted_run(state, cap, s_cap)
+    ca, cb, cw = _sorted_run(chunk, c, s_cap)
+    want = merge_combine_ref(sa, sb, sw, ca, cb, cw, s_cap)
+    got = merge_combine_pallas(
+        sa, sb, sw, ca, cb, cw, s_cap, tn=32, blk=32, interpret=True
+    )
+    _assert_merge_outputs_equal(got, want, case)
+    kept, n = _merge_oracle(state, chunk, cap)
+    assert int(want[3]) == n
+    oa, ow = np.asarray(want[0]), np.asarray(want[2])
+    assert ((oa < s_cap) == (np.arange(cap) < len(kept))).all()
+    want_w = np.array([w for _, w in sorted(kept.items())], np.float32)
+    np.testing.assert_array_equal(ow[: len(kept)], want_w)
+
+
+def test_merge_ops_wrapper():
+    rng = np.random.default_rng(3)
+    s_cap, cap, c = 64, 128, 32
+    sa, sb, sw = _sorted_run(_rand_pairs(rng, 90, s_cap), cap, s_cap)
+    ca, cb, cw = _sorted_run(_rand_pairs(rng, 25, s_cap), c, s_cap)
+    a = merge_ops.merge_combine(sa, sb, sw, ca, cb, cw, s_cap, backend="ref")
+    b = merge_ops.merge_combine(sa, sb, sw, ca, cb, cw, s_cap, backend="interpret")
+    _assert_merge_outputs_equal(a, b)
+
+
+def test_merge_s_cap_at_packing_limit():
+    """s_cap = 2^16 (the BGVConfig default): packed uint32 keys brush the
+    sentinel — pairs near (s_cap-2, s_cap-1) must still merge exactly."""
+    s_cap, cap, c = 1 << 16, 16, 8
+    top = s_cap - 1
+    state = {(0, 1): 1.0, (top - 1, top): 2.0}
+    chunk = {(0, 1): 1.0, (top - 2, top): 3.0, (top - 1, top): 1.0}
+    sa, sb, sw = _sorted_run(state, cap, s_cap)
+    ca, cb, cw = _sorted_run(chunk, c, s_cap)
+    want = merge_combine_ref(sa, sb, sw, ca, cb, cw, s_cap)
+    got = merge_combine_pallas(
+        sa, sb, sw, ca, cb, cw, s_cap, tn=32, blk=32, interpret=True
+    )
+    _assert_merge_outputs_equal(got, want, "s_cap at packing limit")
+    kept, n = _merge_oracle(state, chunk, cap)
+    oa, ob, ow, n_out = want
+    assert int(n_out) == n == 3
+    got_pairs = {
+        (int(a), int(b)): float(w)
+        for a, b, w in zip(np.asarray(oa), np.asarray(ob), np.asarray(ow))
+        if a < s_cap
+    }
+    assert got_pairs == kept
+
+
+def test_merge_rejects_oversized_s_cap():
+    """The packed uint32 pair keys only cover s_cap ≤ 2^16."""
+    z = jnp.zeros(8, jnp.int32)
+    with pytest.raises(ValueError, match="s_cap"):
+        merge_combine_ref(z, z, z.astype(jnp.float32), z, z,
+                          z.astype(jnp.float32), (1 << 16) + 1)

@@ -115,6 +115,32 @@ def test_chunked_agg_matches_oneshot(graph):
     np.testing.assert_array_equal(np.asarray(sw1), np.asarray(sw2))
 
 
+def test_stream_agg_backends_identical_and_timed(graph):
+    """Engine-level: merge vs lexsort aggregation produce the same
+    supergraph through stream_pipeline, and ``time_agg`` fills the
+    per-chunk aggregation timing in StreamStats."""
+    edges, n = graph
+    cfg = _scoda_cfg(edges, n, rounds=2)
+    from repro.core.cms import CMSConfig
+
+    out = {}
+    for backend in ("lexsort", "merge"):
+        labels, gdeg, sg, q, stats = stream_pipeline(
+            edges, n, cfg, CMSConfig(rows=4, cols=256), 512, 2048,
+            StreamConfig(chunk_size=128, agg_backend=backend, time_agg=True),
+        )
+        out[backend] = sg
+        st = EdgeChunkStream(edges, n, 128, block_size=cfg.block_size)
+        assert stats.agg_chunks == st.n_chunks  # one supergraph pass
+        assert stats.agg_update_s > 0.0
+    for field in ("edges", "weights", "sizes", "labels"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out["lexsort"], field)),
+            np.asarray(getattr(out["merge"], field)),
+        )
+    assert int(out["lexsort"].n_superedges) == int(out["merge"].n_superedges)
+
+
 def test_chunked_modularity_matches_oneshot(graph):
     edges, n = graph
     rng = np.random.default_rng(4)

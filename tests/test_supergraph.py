@@ -1,12 +1,24 @@
-"""Supergraph aggregation invariants."""
+"""Supergraph aggregation invariants, for both ``agg_backend`` values:
+oracle parity, the chunked == one-shot property (random graphs, chunk
+sizes, and chunk orderings), the capacity-overflow truncation contract,
+and the all-invalid-chunk short-circuit."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cms as cms_lib
-from repro.core.supergraph import aggregate_edges, build_supergraph
+from repro.core.supergraph import (
+    agg_finalize,
+    agg_init,
+    agg_update,
+    aggregate_edges,
+    build_supergraph,
+)
 from repro.graph import planted_partition, pad_edges
 from repro.graph.utils import degrees
+
+BACKENDS = ("lexsort", "merge")
 
 
 def _oracle_aggregate(edges, labels):
@@ -20,6 +32,20 @@ def _oracle_aggregate(edges, labels):
     return pairs
 
 
+def _labels_ext(labels, s_cap):
+    return jnp.concatenate(
+        [jnp.asarray(labels), jnp.array([s_cap], jnp.int32)]
+    )
+
+
+def _run_chunked(chunks, labels, s_cap, cap, backend):
+    ext = _labels_ext(labels, s_cap)
+    state = agg_init(s_cap, cap)
+    for chunk in chunks:
+        state = agg_update(state, jnp.asarray(chunk), ext, s_cap, cap, backend)
+    return agg_finalize(state)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_aggregate_matches_oracle(seed):
@@ -30,16 +56,174 @@ def test_aggregate_matches_oracle(seed):
     labels = rng.integers(0, 10, size=n).astype(np.int32)
     edges = jnp.asarray(pad_edges(edges_np, e, n))
     s_cap, cap = 16, 256
-    se, sw, n_se = aggregate_edges(edges, jnp.asarray(labels), s_cap, cap)
-    se, sw = np.asarray(se), np.asarray(sw)
     oracle = _oracle_aggregate(edges_np, labels)
-    assert int(n_se) == len(oracle)
-    got = {}
-    for (a, b), w in zip(se, sw):
-        if a < s_cap and b < s_cap and w > 0:
-            got[(int(a), int(b))] = got.get((int(a), int(b)), 0) + w
-    assert got == {k: float(v) for k, v in oracle.items()}
+    for backend in BACKENDS:
+        se, sw, n_se = aggregate_edges(
+            edges, jnp.asarray(labels), s_cap, cap, backend
+        )
+        se, sw = np.asarray(se), np.asarray(sw)
+        assert int(n_se) == len(oracle)
+        got = {}
+        for (a, b), w in zip(se, sw):
+            if a < s_cap and b < s_cap and w > 0:
+                got[(int(a), int(b))] = got.get((int(a), int(b)), 0) + w
+        assert got == {k: float(v) for k, v in oracle.items()}
 
+
+# ------------------------------------------------- chunked == one-shot property
+
+_E_PAD = 192
+_CHUNK_SIZES = (16, 32, 64, 96, 192)  # small palette keeps the jit cache warm
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_chunked_equals_oneshot_any_order(seed):
+    """Chunked aggregation == one-shot, bit-for-bit, for random graphs,
+    random chunk sizes, and random chunk orderings — both backends (the
+    merge path inherits the order-independence contract). Capacity holds
+    every possible pair, so truncation never engages."""
+    rng = np.random.default_rng(seed)
+    n, s_cap, cap = 48, 16, 128  # ≤ C(13,2) = 78 unique pairs < cap
+    e = int(rng.integers(1, _E_PAD + 1))
+    edges_np = rng.integers(0, n, size=(e, 2)).astype(np.int32)
+    labels = rng.integers(0, 13, size=n).astype(np.int32)
+    padded = np.asarray(pad_edges(edges_np, _E_PAD, n))
+
+    se1, sw1, n1 = aggregate_edges(
+        jnp.asarray(padded), jnp.asarray(labels), s_cap, cap, "lexsort"
+    )
+
+    chunk_size = int(rng.choice(_CHUNK_SIZES))
+    chunks = padded.reshape(-1, chunk_size, 2)
+    order = rng.permutation(len(chunks))
+    for backend in BACKENDS:
+        se2, sw2, n2 = _run_chunked(
+            [chunks[i] for i in order], labels, s_cap, cap, backend
+        )
+        assert int(n1) == int(n2), backend
+        np.testing.assert_array_equal(np.asarray(se1), np.asarray(se2), err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(sw1), np.asarray(sw2), err_msg=backend)
+
+
+# ----------------------------------------------- capacity-overflow contract
+
+def _oracle_overflow_update(pairs: dict, chunk_pairs: list, cap: int):
+    """The documented truncation contract, in plain python: union the
+    chunk's pair counts into the state, keep the ``cap`` lexicographically
+    smallest pairs (the weight of dropped pairs is lost), and report the
+    union's unique-pair count (which may exceed ``cap``)."""
+    union = dict(pairs)
+    for p in chunk_pairs:
+        union[p] = union.get(p, 0) + 1
+    n = len(union)
+    kept = dict(sorted(union.items())[:cap])
+    return kept, n
+
+
+def _finalized_pairs(se, sw, s_cap):
+    out = {}
+    for (a, b), w in zip(np.asarray(se), np.asarray(sw)):
+        if a < s_cap:
+            out[(int(a), int(b))] = float(w)
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_overflow_oneshot_keeps_smallest_pairs(backend):
+    """Above capacity the sorted tail is truncated: the state holds the
+    lexicographically smallest ``cap`` pairs while n counts all of them."""
+    n, s_cap, cap = 16, 16, 8
+    labels = np.arange(n, dtype=np.int32)  # one community per node
+    edges_np = np.array(
+        [(i, j) for i in range(n) for j in range(i + 1, n)], np.int32
+    )  # 120 unique pairs ≫ cap
+    se, sw, n_se = aggregate_edges(
+        jnp.asarray(edges_np), jnp.asarray(labels), s_cap, cap, backend
+    )
+    assert int(n_se) == 120
+    want = [(0, j) for j in range(1, cap + 1)]  # lexicographically first 8
+    np.testing.assert_array_equal(np.asarray(se), np.array(want, np.int32))
+    np.testing.assert_array_equal(np.asarray(sw), np.ones(cap, np.float32))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_overflow_chunked_follows_truncation_oracle(backend):
+    """Pin the over-capacity chunked behavior: every update truncates to
+    the smallest ``cap`` pairs of (truncated state ∪ chunk), so the result
+    depends on chunk order — and both backends agree exactly."""
+    n, s_cap, cap = 12, 16, 4
+    labels = np.arange(n, dtype=np.int32)
+    high = np.array([(6, j) for j in range(7, 12)], np.int32)  # pairs (6,7)…(6,11)
+    low = np.array([(0, j) for j in range(1, 6)], np.int32)  # pairs (0,1)…(0,5)
+    mixed = np.concatenate([high[:2], low[:3]])  # re-adds (6,7),(6,8)
+
+    for chunks in ([high, low, mixed], [mixed, high, low], [low, mixed, high]):
+        oracle, oracle_n = {}, 0
+        ext = _labels_ext(labels, s_cap)
+        state = agg_init(s_cap, cap)
+        for chunk in chunks:
+            state = agg_update(state, jnp.asarray(chunk), ext, s_cap, cap, backend)
+            oracle, oracle_n = _oracle_overflow_update(
+                oracle, [tuple(e) for e in chunk], cap
+            )
+            se, sw, n_se = agg_finalize(tuple(jnp.asarray(x) for x in state))
+            assert int(n_se) == oracle_n
+            assert _finalized_pairs(se, sw, s_cap) == oracle
+
+    # Chunk order changes the truncated result (the documented caveat):
+    # the last update's union — and so its n_superedges — differs between
+    # orderings once earlier truncation has dropped pairs.
+    a = _run_chunked([high, low, mixed], labels, s_cap, cap, backend)
+    b = _run_chunked([low, mixed, high], labels, s_cap, cap, backend)
+    assert int(a[2]) != int(b[2])
+
+
+def test_overflow_backends_agree_bit_for_bit():
+    """Even above capacity (where chunked ≠ one-shot), both backends see
+    the same truncation at every update, for any fixed chunk sequence."""
+    rng = np.random.default_rng(11)
+    n, s_cap, cap = 40, 16, 16
+    edges_np = rng.integers(0, n, size=(256, 2)).astype(np.int32)
+    labels = rng.integers(0, 16, size=n).astype(np.int32)  # up to 120 pairs > cap
+    chunks = np.asarray(pad_edges(edges_np, 256, n)).reshape(-1, 64, 2)
+    out = {
+        backend: _run_chunked(chunks, labels, s_cap, cap, backend)
+        for backend in BACKENDS
+    }
+    for x, y in zip(out["lexsort"], out["merge"]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------- all-invalid chunk short-circuit
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_invalid_chunk_is_identity(backend):
+    """A chunk of only trash-padding or intra-community edges must leave
+    the aggregation state exactly unchanged (the update short-circuits
+    instead of rewriting the whole state)."""
+    rng = np.random.default_rng(2)
+    n, s_cap, cap = 30, 8, 64
+    labels = rng.integers(0, 8, size=n).astype(np.int32)
+    edges_np = rng.integers(0, n, size=(50, 2)).astype(np.int32)
+    ext = _labels_ext(labels, s_cap)
+    state = agg_init(s_cap, cap)
+    state = agg_update(
+        state, jnp.asarray(pad_edges(edges_np, 64, n)), ext, s_cap, cap, backend
+    )
+    before = tuple(np.asarray(x) for x in state)
+
+    trash_chunk = jnp.full((64, 2), n, jnp.int32)
+    same = rng.integers(0, n, size=64).astype(np.int32)
+    intra_chunk = jnp.asarray(np.stack([same, same], axis=1))  # self loops: intra
+    for chunk in (trash_chunk, intra_chunk):
+        state = tuple(jnp.asarray(x) for x in before)
+        state = agg_update(state, chunk, ext, s_cap, cap, backend)
+        for got, want in zip(state, before):
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ------------------------------------------------------------- legacy checks
 
 def test_no_self_loops_and_canonical_order():
     edges_np, _ = planted_partition(200, 5, 0.3, 0.02, seed=1)
