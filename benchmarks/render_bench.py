@@ -1,0 +1,192 @@
+"""Raster-stage benchmark: node-disk and streamed edge-splat throughput
+(Mpixels/s, edges/s) per raster backend and resolution (repro/render).
+
+The edge pass is the renderer's scaling stage: chunks stream through
+``EdgeChunkStream`` and splat through ``kernels/raster``, so its device
+residency (accumulation buffers + chunk buffers) must be independent of
+|E| — the residency sweep renders the same scene at |E| and 4·|E| and
+records both peaks.
+
+    PYTHONPATH=src python -m benchmarks.render_bench
+    PYTHONPATH=src python -m benchmarks.render_bench --quick --json r.json
+    PYTHONPATH=src python -m benchmarks.render_bench --check
+    PYTHONPATH=src python -m benchmarks.run --only render
+
+CSV rows (name,us_per_call,derived) per the harness contract; ``--json``
+writes the structured records (the CI ``render-smoke`` artifact).
+``--check`` asserts the acceptance bar: the streamed edge-splat stage
+sustains ≥ 1M edges/s at the check point (512², 4 samples/edge), and
+peak render device bytes are bit-equal across the |E| vs 4·|E| runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.render import RenderConfig, render_arrays
+
+N_NODES = 5000
+EDGES_FULL = 1 << 20
+EDGES_QUICK = 1 << 19
+RES_FULL = (512, 1024)
+RES_QUICK = (512,)
+CHECK_EDGES_PER_S = 1e6
+CHECK_CFG = dict(width=512, height=512, edge_samples=4, chunk_size=1 << 16)
+
+
+def _backends() -> tuple:
+    return ("ref", "pallas") if jax.default_backend() == "tpu" else ("ref",)
+
+
+def _scene(n_edges: int, seed: int = 7):
+    """Synthetic layout + edges: raster cost is shape/occupancy-driven,
+    not layout-quality-driven, so random positions keep the bench
+    independent of SCoDA/FA2."""
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(0.0, 100.0, (N_NODES, 2)).astype(np.float32)
+    radii = rng.uniform(0.5, 4.0, N_NODES).astype(np.float32)
+    groups = rng.integers(0, 11, N_NODES).astype(np.int32)
+    edges = rng.integers(0, N_NODES, (n_edges, 2)).astype(np.int32)
+    return pos, radii, groups, edges
+
+
+def _best_stats(fn, repeat: int = 3):
+    """Warm (compile) once, then keep the fastest run's stats."""
+    fn()
+    best = None
+    for _ in range(repeat):
+        _, st = fn()
+        if best is None or st.seconds < best.seconds:
+            best = st
+    return best
+
+
+def run(quick: bool = False, records: list | None = None,
+        edges_np: np.ndarray | None = None):
+    pos, radii, groups, edges = _scene(EDGES_QUICK if quick else EDGES_FULL)
+    if edges_np is not None:
+        edges = edges_np
+    resolutions = RES_QUICK if quick else RES_FULL
+    for backend in _backends():
+        for res in resolutions:
+            base = RenderConfig(width=res, height=res, backend=backend,
+                                time_raster=True)
+            # Node-disk pass (dense per-pixel coverage).
+            st = _best_stats(lambda: render_arrays(
+                pos, radii, groups, None, cfg=base))
+            mpix = res * res / max(st.node_raster_s, 1e-9) / 1e6
+            yield row(
+                f"render/nodes/{backend}/r{res}", st.node_raster_s,
+                f"mpix_s={mpix:.1f};nodes={st.nodes_drawn}",
+            )
+            if records is not None:
+                records.append({
+                    "kind": "nodes", "backend": backend, "res": res,
+                    "nodes": st.nodes_drawn,
+                    "node_raster_s": st.node_raster_s, "mpix_s": mpix,
+                })
+            # Streamed edge-splat pass.
+            for samples in (4, 8):
+                cfg = replace(base, draw_nodes=False, edge_samples=samples)
+                st = _best_stats(lambda c=cfg: render_arrays(
+                    pos, radii, groups, edges, cfg=c))
+                eps = st.edges_per_s
+                yield row(
+                    f"render/edges/{backend}/r{res}/s{samples}",
+                    st.edge_raster_s,
+                    f"edges_s={eps / 1e6:.2f}M;chunks={st.chunks}",
+                )
+                if records is not None:
+                    records.append({
+                        "kind": "edges", "backend": backend, "res": res,
+                        "samples": samples, "n_edges": len(edges),
+                        "chunks": st.chunks,
+                        "edge_raster_s": st.edge_raster_s,
+                        "edges_per_s": eps,
+                        "raster_update_s": st.stream.raster_update_s,
+                        "peak_device_bytes": st.peak_device_bytes,
+                    })
+
+    # Residency sweep: same scene at |E| and 4·|E| — the renderer's peak
+    # device bytes must not move (chunked accumulation, fixed buffers).
+    cfg = RenderConfig(**CHECK_CFG, draw_nodes=False)
+    for scale_tag, e in (("E", edges), ("4E", np.tile(edges, (4, 1)))):
+        _, st = render_arrays(pos, radii, groups, e, cfg=cfg)
+        yield row(
+            f"render/residency/{scale_tag}", st.edge_raster_s,
+            f"peak_device_bytes={st.peak_device_bytes};n_edges={len(e)}",
+        )
+        if records is not None:
+            records.append({
+                "kind": "residency", "scale": scale_tag, "n_edges": len(e),
+                "peak_device_bytes": st.peak_device_bytes,
+                "edges_per_s": st.edges_per_s,
+            })
+
+
+def _check(records: list) -> None:
+    """Acceptance bar: ≥ 1M edges/s at the check point; peak device bytes
+    bit-equal across the |E| / 4·|E| residency runs."""
+    pts = [r for r in records if r["kind"] == "edges"
+           and r["res"] == CHECK_CFG["width"]
+           and r["samples"] == CHECK_CFG["edge_samples"]]
+    assert pts, "no check-point records (res=512, samples=4)"
+    best = max(p["edges_per_s"] for p in pts)
+    assert best >= CHECK_EDGES_PER_S, (
+        f"edge splat too slow: {best / 1e6:.2f}M edges/s "
+        f"< {CHECK_EDGES_PER_S / 1e6:.0f}M"
+    )
+    peaks = {r["scale"]: r["peak_device_bytes"] for r in records
+             if r["kind"] == "residency"}
+    assert peaks["E"] == peaks["4E"], (
+        f"render residency grew with |E|: {peaks['E']:,} → {peaks['4E']:,}"
+    )
+    print(
+        f"check: edge splat {best / 1e6:.2f}M edges/s ≥ 1M; "
+        f"peak device bytes |E|-independent ({peaks['E']:,})"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="smaller sweep")
+    ap.add_argument("--json", default="",
+                    help="also write structured records to this path")
+    ap.add_argument("--edges", default="",
+                    help="bench a converted .npy edge file instead of the "
+                         "synthetic scene (node ids are remapped mod N)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert ≥1M edges/s and |E|-independent residency")
+    args = ap.parse_args()
+
+    edges_np = None
+    if args.edges:
+        from repro.data.edge_store import NpyEdgeStore
+
+        store = NpyEdgeStore(args.edges)
+        edges_np = store.read(0, store.n_edges) % N_NODES
+    records: list = []
+    print("name,us_per_call,derived")
+    for line in run(quick=args.quick, records=records, edges_np=edges_np):
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "bench": "render_bench",
+                "n_nodes": N_NODES,
+                "backends": list(_backends()),
+                "check_cfg": CHECK_CFG,
+                "records": records,
+            }, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        _check(records)
+
+
+if __name__ == "__main__":
+    main()

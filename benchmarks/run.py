@@ -16,9 +16,9 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated module subset")
     args = ap.parse_args()
 
-    from benchmarks import (agg_bench, fig_params, kernels_bench, roofline,
-                            stream_bench, table1_speedup, table2_hashes,
-                            table3_rounds)
+    from benchmarks import (agg_bench, fig_params, kernels_bench,
+                            render_bench, roofline, stream_bench,
+                            table1_speedup, table2_hashes, table3_rounds)
 
     modules = {
         "table1": table1_speedup,
@@ -28,6 +28,7 @@ def main() -> None:
         "kernels": kernels_bench,
         "stream": stream_bench,
         "agg": agg_bench,
+        "render": render_bench,
         "roofline": roofline,
     }
     if args.only:

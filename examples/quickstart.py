@@ -3,9 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Generates a planted-partition graph, runs the full paper pipeline
-(streaming SCoDA → count-min-sketch sizing → supergraph → ForceAtlas2),
-prints the Table-1-style summary, and writes supergraph.svg +
-full_colored.svg next to this script.
+(streaming SCoDA → count-min-sketch sizing → supergraph → ForceAtlas2 →
+streamed rasterization), prints the Table-1-style summary, and writes
+supergraph.png / supergraph.svg + full_colored.png / full_colored.svg
+next to this script.
 """
 import os
 import sys
@@ -21,6 +22,7 @@ from repro.core import (
     write_svg,
 )
 from repro.graph import mode_degree, planted_partition
+from repro.render import RenderConfig, render_arrays, write_png
 
 
 def main() -> None:
@@ -29,32 +31,49 @@ def main() -> None:
     delta = mode_degree(edges, n)
     print(f"graph: {n} nodes, {len(edges)} edges, mode degree δ={delta}")
 
+    out = os.path.dirname(os.path.abspath(__file__))
     cfg = default_config(n, len(edges), delta, rounds=4, iterations=60, s_cap=4096)
     # Superedge aggregation runs the two-level sorted-merge backend by
     # default (StreamConfig.agg_backend="merge"; "lexsort" = old baseline).
-    res = biggraphvis(edges, n, cfg)
+    # render_path= streams the supergraph drawing through the rasterizer
+    # (repro/render): superedge splats + supernode disks → PNG.
+    res = biggraphvis(edges, n, cfg,
+                      render_path=os.path.join(out, "supergraph.png"))
     print(
         f"BigGraphVis: {res.n_supernodes} supernodes, {res.n_superedges} superedges, "
         f"modularity={res.modularity:.3f}"
     )
     print("timings:", {k: f"{v:.2f}s" for k, v in res.timings.items()})
+    print("wrote", os.path.join(out, "supergraph.png"))
 
-    out = os.path.dirname(os.path.abspath(__file__))
     live = res.sizes > 0
-    write_svg(
+    drawn = write_svg(
         os.path.join(out, "supergraph.svg"),
         res.positions[live],
         np.sqrt(np.maximum(res.sizes[live], 1.0)),
         res.groups[live],
     )
-    print("wrote", os.path.join(out, "supergraph.svg"))
+    print("wrote", drawn)
 
     pos, groups = full_layout_colored(edges, n, cfg, iterations=60)
-    write_svg(
+    drawn = write_svg(
         os.path.join(out, "full_colored.svg"), pos, np.full(n, 2.0), groups,
         edges=edges[:4000],
     )
-    print("wrote", os.path.join(out, "full_colored.svg"))
+    print("wrote", drawn)
+
+    # Full-graph raster render: every edge streamed through the raster
+    # chunk path (residency independent of |E|), nodes as 2px dots.
+    img, rstats = render_arrays(
+        pos, np.full(n, 2.0), groups, edges,
+        cfg=RenderConfig(width=768, height=768, supersample=2),
+    )
+    write_png(os.path.join(out, "full_colored.png"), img)
+    print(
+        f"wrote {os.path.join(out, 'full_colored.png')} "
+        f"({rstats.edges_streamed} edge rows in {rstats.chunks} chunks, "
+        f"{rstats.edges_per_s / 1e6:.2f}M edges/s)"
+    )
 
 
 if __name__ == "__main__":

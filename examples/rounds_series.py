@@ -26,9 +26,10 @@ def main() -> None:
         cfg = replace(base, scoda=replace(base.scoda, rounds=r))
         res = biggraphvis(edges, n, cfg)
         live = res.sizes > 0
-        path = os.path.join(out, f"rounds_{r}.svg")
-        write_svg(path, res.positions[live],
-                  np.sqrt(np.maximum(res.sizes[live], 1.0)), res.groups[live])
+        path = write_svg(os.path.join(out, f"rounds_{r}.svg"),
+                         res.positions[live],
+                         np.sqrt(np.maximum(res.sizes[live], 1.0)),
+                         res.groups[live])
         print(f"rounds={r}: SN={res.n_supernodes} SE={res.n_superedges} "
               f"M={res.modularity:.3f} -> {path}")
 

@@ -15,6 +15,12 @@ The streamed form of the detect pass aggregates superedges through
 two-level sorted-merge (kernels/merge — Pallas on TPU, XLA elsewhere)
 or the ``"lexsort"`` full re-sort baseline; both are bit-identical
 below the superedge capacity.
+
+The drawing stage itself is on-device too: repro/render rasterizes the
+laid-out (super)graph through ``kernels/raster`` (edge splats streamed
+chunk-by-chunk via EdgeChunkStream, node disks, int32 density
+accumulation per palette color), so the picture for these Table-1
+shapes is produced without the edge list ever being device-resident.
 """
 from __future__ import annotations
 

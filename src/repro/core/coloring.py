@@ -8,6 +8,8 @@ light green, green, light blue, blue.
 """
 from __future__ import annotations
 
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,16 +60,34 @@ def node_colors(groups: np.ndarray) -> np.ndarray:
 
 
 def write_svg(path: str, pos: np.ndarray, radii: np.ndarray, groups: np.ndarray,
-              edges: np.ndarray | None = None, max_nodes: int = 200_000) -> None:
-    """Minimal SVG renderer (no display stack on TPU hosts — DESIGN.md §2)."""
-    pos = np.asarray(pos)[:max_nodes]
-    radii = np.asarray(radii)[:max_nodes]
-    colors = node_colors(np.asarray(groups)[:max_nodes])
+              edges: np.ndarray | None = None, max_nodes: int = 200_000) -> str:
+    """Minimal SVG renderer (no display stack on TPU hosts — DESIGN.md §2).
+
+    The per-element Python string loop only scales to small graphs; inputs
+    beyond ``max_nodes`` delegate to the streaming rasterizer
+    (repro/render) and write a PNG next to ``path`` instead. Returns the
+    path actually written.
+    """
+    pos = np.asarray(pos)
+    radii = np.asarray(radii)
+    groups = np.asarray(groups)
+    if len(pos) > max_nodes:
+        # Local import: repro.render pulls PALETTE from this module.
+        from repro.render import render_arrays
+        from repro.render.png import write_png
+
+        out = str(Path(path).with_suffix(".png"))
+        image, _stats = render_arrays(pos, radii, groups, edges)
+        return write_png(out, image)
+    colors = node_colors(groups)
     lo = pos.min(axis=0)
     hi = pos.max(axis=0)
     span = np.maximum(hi - lo, 1e-6)
     size = 1024.0
     xy = (pos - lo) / span * size
+    # SVG y grows downward; world y grows upward — flip so the drawing is
+    # not mirrored about the horizontal axis.
+    xy[:, 1] = size - xy[:, 1]
     rr = radii / span.max() * size
     rr = np.clip(rr, 0.5, size / 8)
     parts = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{int(size)}" height="{int(size)}">']
@@ -87,3 +107,4 @@ def write_svg(path: str, pos: np.ndarray, radii: np.ndarray, groups: np.ndarray,
     parts.append("</svg>")
     with open(path, "w") as f:
         f.write("\n".join(parts))
+    return str(path)

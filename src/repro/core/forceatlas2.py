@@ -40,6 +40,7 @@ class FA2Config:
     jitter_tolerance: float = 1.0  # τ in the FA2 speed controller
     repulsion: str = "exact"  # "exact" | "grid"
     grid_size: int = 64
+    grid_window: int = 32  # near-field band half-width of "grid" repulsion
     use_radii: bool = True  # supernode radii shift repulsion distances
     seed: int = 0
     dtype: str = "float32"
@@ -75,7 +76,7 @@ def _pair_force(dpos, mi, mj, kr):
     return mag[..., None] * dpos
 
 
-def _grid_repulsion(pos, mass, cfg: FA2Config, window: int = 32):
+def _grid_repulsion(pos, mass, cfg: FA2Config):
     """Uniform-grid repulsion — the TPU-native Barnes–Hut analogue.
 
     Far field: bin nodes into G×G cells (segment-sum centroids/masses —
@@ -83,11 +84,12 @@ def _grid_repulsion(pos, mass, cfg: FA2Config, window: int = 32):
     *monopole*; this mirrors BH's θ-acceptance of coarse cells. Near field:
     BH recurses inside the node's own region, so we subtract the own-cell
     monopole and replace it with *exact* pairwise interaction against
-    same-cell nodes, found contiguously after a sort-by-cell (a ±window
-    band — exact for cells with ≤ window members). O(n·(G² + window)),
-    fully dense ops, no pointer chasing.
+    same-cell nodes, found contiguously after a sort-by-cell (a
+    ±``cfg.grid_window`` band — exact for cells with ≤ grid_window
+    members). O(n·(G² + grid_window)), fully dense ops, no pointer chasing.
     """
     g = cfg.grid_size
+    window = cfg.grid_window
     n = pos.shape[0]
     kr = cfg.repulsion_k
     lo = jnp.min(pos, axis=0)
@@ -115,8 +117,10 @@ def _grid_repulsion(pos, mass, cfg: FA2Config, window: int = 32):
     pos_s, mass_s, cell_s = pos[order], mass[order], cell[order]
     p = jnp.arange(n)
     offs = jnp.arange(-window, window + 1)
-    nbr = jnp.clip(p[:, None] + offs[None, :], 0, n - 1)  # [n, 2W+1]
-    same = (cell_s[nbr] == cell_s[:, None]) & (nbr != p[:, None])
+    raw = p[:, None] + offs[None, :]  # [n, 2W+1]
+    in_range = (raw >= 0) & (raw < n)  # clipping would duplicate endpoints
+    nbr = jnp.clip(raw, 0, n - 1)
+    same = in_range & (cell_s[nbr] == cell_s[:, None]) & (nbr != p[:, None])
     dn = pos_s[:, None, :] - pos_s[nbr]
     fn = _pair_force(dn, mass_s[:, None], jnp.where(same, mass_s[nbr], 0.0), kr)
     near = jnp.sum(fn, axis=1)

@@ -2,6 +2,7 @@
 
     edge stream ──► SCoDA communities ──► CMS sizing ──► supergraph
                 ──► ForceAtlas2 layout ──► colored supernode drawing
+                ──► rasterized image (repro/render, ``render_path=``)
 
 plus the paper's second output mode: a *full-graph* ForceAtlas2 layout
 recolored by the detected communities (§4.3).
@@ -113,6 +114,8 @@ def biggraphvis(
     cfg: BGVConfig,
     stream: StreamConfig | None = None,
     put=None,
+    render_path: str | None = None,
+    render_cfg=None,
 ) -> BGVResult:
     """Single-host driver. ``source`` is any engine edge source: an [E,2]
     unpadded int32 host array, an ``EdgeStore``, or a path to a ``.npy`` /
@@ -128,6 +131,11 @@ def biggraphvis(
     "lexsort" baseline). ``put`` is the host→device transfer for
     chunk buffers (launch/stream_runner.py passes a sharded forced-copy
     device_put; None selects the engine default for the source).
+
+    ``render_path`` additionally rasterizes the supergraph drawing to a
+    PNG through the streaming renderer (repro/render — paper §4.3's
+    colored output), with ``render_cfg`` an optional ``RenderConfig``;
+    the raster time lands in ``timings["render_s"]``.
     """
     labels, _gdeg, sg, q, stats = stream_pipeline(
         source, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap, cfg.max_super_edges,
@@ -143,7 +151,7 @@ def biggraphvis(
     t["layout_s"] = time.perf_counter() - t0
 
     groups = color_groups(sg.sizes)
-    return BGVResult(
+    result = BGVResult(
         positions=np.asarray(pos),
         sizes=np.asarray(sg.sizes),
         groups=np.asarray(groups),
@@ -155,6 +163,14 @@ def biggraphvis(
         timings=t,
         stream=stats,
     )
+    if render_path is not None:
+        # Local import: repro.render consumes this module's BGVResult.
+        from repro.render import render as render_result
+
+        t0 = time.perf_counter()
+        render_result(result, render_path, cfg=render_cfg)
+        t["render_s"] = time.perf_counter() - t0
+    return result
 
 
 def full_layout_colored(
@@ -172,6 +188,8 @@ def full_layout_colored(
     lcfg = fa2.FA2Config(
         iterations=iterations,
         repulsion="grid" if n_nodes > 4096 else "exact",
+        grid_size=cfg.layout.grid_size,
+        grid_window=cfg.layout.grid_window,
         use_radii=False,
         gravity=cfg.layout.gravity,
         repulsion_k=cfg.layout.repulsion_k,

@@ -97,7 +97,10 @@ class StreamStats:
     be reused — both ≈ 0 when copies overlap compute. ``agg_update_s`` /
     ``agg_chunks`` are the blocking per-chunk superedge-aggregation timing,
     populated only under ``StreamConfig.time_agg`` (benchmarks/agg_bench.py
-    compares them across ``agg_backend`` values)."""
+    compares them across ``agg_backend`` values). ``raster_update_s`` /
+    ``raster_chunks`` are their per-chunk analogue for the renderer's
+    streamed edge-splat pass (repro/render/raster.py, populated under
+    ``RenderConfig.time_raster``; benchmarks/render_bench.py)."""
 
     passes: int = 0
     chunks: int = 0
@@ -110,6 +113,8 @@ class StreamStats:
     copy_stall_s: float = 0.0
     agg_update_s: float = 0.0
     agg_chunks: int = 0
+    raster_update_s: float = 0.0
+    raster_chunks: int = 0
     stage_seconds: dict = field(default_factory=dict)
 
     @property

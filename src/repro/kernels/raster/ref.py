@@ -1,0 +1,95 @@
+"""XLA reference path for the rasterization kernel family (render/).
+
+Two primitives, both accumulating **int32 counts** — integer adds are
+associative, so chunked accumulation is bit-identical to one-shot
+whatever the chunk order (the renderer's streaming contract, mirroring
+the engine's chunked==one-shot guarantee):
+
+* ``count_scatter_ref`` — scatter-add per-sample increments into a flat
+  accumulation buffer (edge splatting: every sampled line-segment point
+  becomes one (channel·pixel, increment) row). Out-of-range positions
+  (the renderer marks dropped samples INT32_MAX) fall off via scatter
+  ``mode="drop"``.
+* ``disk_accum_ref`` — dense per-pixel disk coverage: for every pixel and
+  every node, test inside ``|p - c| ≤ r`` and accumulate into the node's
+  color-group channel. Evaluated in row bands so the [n, band, w] mask is
+  the only transient (never [n, h, w]); nodes with ``r ≤ 0`` (dead
+  padding slots) and out-of-range groups contribute nothing.
+
+The Pallas counterparts (splat.py) compute the same masks with the same
+float32 ops, so parity is exact, not approximate (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def count_scatter_ref(pos: jnp.ndarray, inc: jnp.ndarray, size: int) -> jnp.ndarray:
+    """[N] int32 positions + [N] int32 increments → [size] int32 counts.
+
+    Positions outside [0, size) are dropped (the splat path marks invalid
+    samples INT32_MAX).
+    """
+    return count_scatter_into_ref(jnp.zeros(size, jnp.int32), pos, inc)
+
+
+@jax.jit
+def count_scatter_into_ref(
+    acc: jnp.ndarray, pos: jnp.ndarray, inc: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """``acc.at[pos].add(inc)`` with out-of-range rows dropped — the
+    accumulating form the renderer's chunk loop uses (no fresh buffer +
+    add per chunk; with ``acc`` donated the scatter runs in place).
+
+    ``inc=None`` means unit increments; that case pre-sorts the positions
+    and flags ``indices_are_sorted`` — ~40% faster through XLA's CPU
+    scatter, and with no increment vector to reorder the sort is a plain
+    ``jnp.sort``. (A weighted sort would need sort_key_val, which costs
+    more than the unsorted scatter saves.) Both orders sum identically —
+    integer adds commute — so the chunked==one-shot contract is unmoved.
+    """
+    # Negative positions would wrap (NumPy indexing) before mode="drop"
+    # sees them; remap onto the dropped slot just past the end.
+    pos = jnp.where(pos < 0, acc.shape[0], pos)
+    if inc is None:
+        return acc.at[jnp.sort(pos)].add(1, mode="drop", indices_are_sorted=True)
+    return acc.at[pos].add(inc, mode="drop")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_groups", "h", "w", "band")
+)
+def disk_accum_ref(
+    cx: jnp.ndarray,  # [n] float32 pixel-space centers
+    cy: jnp.ndarray,  # [n] float32
+    r: jnp.ndarray,  # [n] float32 pixel radii (≤ 0 = skip the node)
+    group: jnp.ndarray,  # [n] int32 color group (out of range = skip)
+    n_groups: int,
+    h: int,
+    w: int,
+    band: int = 8,
+) -> jnp.ndarray:
+    """Per-pixel disk coverage counts, [n_groups, h, w] int32."""
+    h_pad = ((h + band - 1) // band) * band
+    xs = jnp.arange(w, dtype=jnp.float32)
+    dx2 = (xs[None, :] - cx[:, None]) ** 2  # [n, w]
+    r2 = (r * r)[:, None, None]
+    alive = (r > 0)[:, None, None]
+    # Negative groups would wrap (NumPy indexing) before mode="drop" sees
+    # them; remap every out-of-range group onto the dropped slot n_groups.
+    grp = jnp.where((group >= 0) & (group < n_groups), group, n_groups)
+
+    def one_band(y0):
+        ys = (y0 + jnp.arange(band)).astype(jnp.float32)  # [band]
+        dy2 = (ys[None, :] - cy[:, None]) ** 2  # [n, band]
+        inside = (dy2[:, :, None] + dx2[:, None, :]) <= r2  # [n, band, w]
+        inside = inside & alive
+        acc = jnp.zeros((n_groups, band, w), jnp.int32)
+        return acc.at[grp].add(inside.astype(jnp.int32), mode="drop")
+
+    bands = jax.lax.map(one_band, jnp.arange(h_pad // band) * band)
+    return bands.transpose(1, 0, 2, 3).reshape(n_groups, h_pad, w)[:, :h]

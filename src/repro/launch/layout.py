@@ -65,15 +65,18 @@ def main() -> None:
           f"{time.perf_counter()-t0:.1f}s", file=sys.stderr)
 
     live = res.sizes > 0
-    write_svg(args.out, res.positions[live],
-              np.sqrt(np.maximum(res.sizes[live], 1.0)), res.groups[live])
+    # write_svg delegates >max_nodes inputs to the rasterizer as a .png —
+    # report the path it actually wrote.
+    drawn = write_svg(args.out, res.positions[live],
+                      np.sqrt(np.maximum(res.sizes[live], 1.0)),
+                      res.groups[live])
     csv = args.out.rsplit(".", 1)[0] + ".csv"
     with open(csv, "w") as f:
         f.write("community,size,x,y,color_group\n")
         for i in np.nonzero(live)[0]:
             f.write(f"{i},{res.sizes[i]:.0f},{res.positions[i,0]:.2f},"
                     f"{res.positions[i,1]:.2f},{res.groups[i]}\n")
-    print(f"wrote {args.out} + {csv}", file=sys.stderr)
+    print(f"wrote {drawn} + {csv}", file=sys.stderr)
 
 
 if __name__ == "__main__":

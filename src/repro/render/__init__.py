@@ -1,0 +1,12 @@
+"""Streaming GPU rasterization subsystem: density-accumulation rendering
+of (positions, sizes, groups, edges) to RGB images on-device, with edges
+streamed through the engine's EdgeChunkStream (raster.py) and
+dependency-free PNG I/O (png.py)."""
+from repro.render.png import read_png, write_png
+from repro.render.raster import (
+    RenderConfig,
+    RenderStats,
+    image_summary,
+    render,
+    render_arrays,
+)

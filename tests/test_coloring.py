@@ -1,0 +1,72 @@
+"""Property tests for the §4.3 coloring strategy (core/coloring.py):
+the brown bulk holds at most half the total mass, the remaining ten
+buckets are equal-count, and grouping is a function of the size multiset
+(invariant under permutation of the size vector)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coloring import color_groups
+
+
+def _sizes(rng, n: int) -> np.ndarray:
+    return (rng.pareto(1.2, n) * 10 + 1).astype(np.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_bulk_holds_at_most_half_the_mass(seed):
+    rng = np.random.default_rng(seed)
+    sizes = _sizes(rng, 200)
+    groups = np.asarray(color_groups(jnp.asarray(sizes)))
+    bulk = float(sizes[groups == 0].sum())
+    total = float(sizes.sum())
+    assert bulk <= 0.5 * total * (1 + 1e-5), (bulk, total)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_groups_1_to_10_equal_count(seed):
+    rng = np.random.default_rng(seed)
+    sizes = _sizes(rng, 64 + 37 * (seed % 3))  # few shapes: bounded retraces
+    groups = np.asarray(color_groups(jnp.asarray(sizes)))
+    counts = np.bincount(groups, minlength=11)[1:]
+    assert counts.max() - counts.min() <= 1, counts
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_grouping_invariant_under_permutation(seed):
+    """color_groups(sizes[perm]) == color_groups(sizes)[perm] — grouping
+    depends on a community's size, not its slot. Distinct sizes make the
+    per-index form exact (ties may legitimately swap across the bulk
+    boundary); tied vectors are covered by the multiset check below."""
+    rng = np.random.default_rng(seed)
+    n = 150
+    sizes = rng.choice(np.arange(1, 100 * n), size=n, replace=False).astype(
+        np.float32
+    )
+    perm = rng.permutation(n)
+    g = np.asarray(color_groups(jnp.asarray(sizes)))
+    g_perm = np.asarray(color_groups(jnp.asarray(sizes[perm])))
+    np.testing.assert_array_equal(g_perm, g[perm])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_group_multiset_invariant_with_ties(seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 8, 120).astype(np.float32)  # heavy ties
+    perm = rng.permutation(len(sizes))
+    g = np.asarray(color_groups(jnp.asarray(sizes)))
+    g_perm = np.asarray(color_groups(jnp.asarray(sizes[perm])))
+    np.testing.assert_array_equal(
+        np.bincount(g, minlength=11), np.bincount(g_perm, minlength=11)
+    )
+
+
+def test_zero_sizes_stay_brown():
+    sizes = jnp.asarray([0.0, 0.0, 5.0, 1.0, 0.0, 9.0])
+    groups = np.asarray(color_groups(sizes))
+    assert (groups[np.asarray(sizes) == 0] == 0).all()
+    assert groups.min() >= 0 and groups.max() <= 10

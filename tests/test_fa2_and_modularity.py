@@ -82,3 +82,40 @@ def test_color_groups_bulk_and_range():
     assert 0.3 < bulk_mass < 0.7  # "smaller communities covering 50% of α"
     # biggest community gets the biggest color bucket
     assert groups[np.argmax(s)] == 10
+
+
+def test_grid_window_configurable_and_threaded():
+    """FA2Config.grid_window drives the near-field band of grid repulsion:
+    a window wide enough for every cell's occupancy reproduces the default,
+    a zero window (far-field only) does not."""
+    rng = np.random.default_rng(7)
+    n = 128
+    pos = jnp.asarray(rng.uniform(-300, 300, size=(n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(1, 3, size=n).astype(np.float32))
+    base = fa2.FA2Config(repulsion="grid", grid_size=8, use_radii=False)
+    f32 = np.asarray(fa2._grid_repulsion(pos, mass, base))
+    import dataclasses
+
+    wide = dataclasses.replace(base, grid_window=n)
+    f_wide = np.asarray(fa2._grid_repulsion(pos, mass, wide))
+    narrow = dataclasses.replace(base, grid_window=0)
+    f0 = np.asarray(fa2._grid_repulsion(pos, mass, narrow))
+    # window = n covers every same-cell pair the default window=32 covers
+    # for cells with <= 32 members (n=128 over 64 cells: essentially all).
+    np.testing.assert_allclose(f_wide, f32, rtol=1e-4, atol=1e-3)
+    assert np.abs(f0 - f32).max() > 1e-3  # near field actually contributes
+
+
+def test_full_layout_colored_threads_grid_window():
+    from dataclasses import replace as drep
+
+    from repro.core import default_config, full_layout_colored
+    from repro.graph import mode_degree
+
+    edges_np, _ = planted_partition(150, 5, 0.3, 0.01, seed=3)
+    n = 150
+    cfg = default_config(n, len(edges_np), mode_degree(edges_np, n),
+                         rounds=2, iterations=5)
+    cfg = drep(cfg, layout=drep(cfg.layout, grid_window=4))
+    pos, groups = full_layout_colored(edges_np, n, cfg, iterations=5)
+    assert np.isfinite(pos).all() and len(groups) == n

@@ -17,6 +17,15 @@ from repro.kernels.segment import ops as seg_ops
 from repro.kernels.merge.ref import merge_combine_ref
 from repro.kernels.merge.sorted_merge import merge_combine_pallas
 from repro.kernels.merge import ops as merge_ops
+from repro.kernels.raster.ref import (
+    count_scatter_into_ref,
+    count_scatter_ref,
+    disk_accum_ref,
+)
+from repro.kernels.raster.splat import count_scatter_pallas, disk_accum_pallas
+from repro.kernels.raster import ops as raster_ops
+
+INT32_MAX = np.iinfo(np.int32).max
 
 
 # ---------------------------------------------------------------- repulsion
@@ -274,3 +283,137 @@ def test_merge_rejects_oversized_s_cap():
     with pytest.raises(ValueError, match="s_cap"):
         merge_combine_ref(z, z, z.astype(jnp.float32), z, z,
                           z.astype(jnp.float32), (1 << 16) + 1)
+
+
+# -------------------------------------------------------------------- raster
+@pytest.mark.parametrize("n,size,tn,blk", [
+    (500, 300, 64, 128),
+    (2048, 4096, 512, 512),
+    (777, 1000, 128, 256),  # neither tile- nor block-aligned
+])
+def test_count_scatter_kernel_vs_ref(n, size, tn, blk):
+    rng = np.random.default_rng(n + size)
+    pos = rng.integers(0, size, n).astype(np.int32)
+    pos[::7] = INT32_MAX  # dropped-sample marker (padding chunks)
+    pos[::11] = size + 3  # out of range
+    inc = rng.integers(1, 6, n).astype(np.int32)
+    want = count_scatter_ref(jnp.asarray(pos), jnp.asarray(inc), size)
+    got = count_scatter_pallas(
+        jnp.asarray(pos), jnp.asarray(inc), size, tn=tn, blk=blk, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("case", ["one_pixel", "all_padding", "negatives"])
+def test_count_scatter_adversarial(case):
+    """Edge-splat contract edge cases: every sample in one pixel (dense
+    single-cell collision), an empty / all-padding chunk (every position
+    is the dropped marker), and negative positions (must drop, not wrap)."""
+    n, size = 640, 256
+    rng = np.random.default_rng(3)
+    inc = rng.integers(1, 4, n).astype(np.int32)
+    if case == "one_pixel":
+        pos = np.full(n, 77, np.int32)
+    elif case == "all_padding":
+        pos = np.full(n, INT32_MAX, np.int32)
+    else:
+        pos = rng.integers(-5, size, n).astype(np.int32)
+    want = count_scatter_ref(jnp.asarray(pos), jnp.asarray(inc), size)
+    got = count_scatter_pallas(
+        jnp.asarray(pos), jnp.asarray(inc), size, tn=64, blk=128, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if case == "one_pixel":
+        assert int(want[77]) == int(inc.sum())
+    if case == "all_padding":
+        assert int(np.asarray(want).sum()) == 0
+
+
+def test_count_scatter_into_matches_fresh():
+    """The accumulating form (weighted and unit-increment sorted path)
+    equals fresh-buffer scatter + add."""
+    rng = np.random.default_rng(9)
+    size, n = 500, 1200
+    pos = rng.integers(-2, size + 2, n).astype(np.int32)
+    inc = rng.integers(1, 5, n).astype(np.int32)
+    base = jnp.asarray(rng.integers(0, 3, size).astype(np.int32))
+    got_w = count_scatter_into_ref(base, jnp.asarray(pos), jnp.asarray(inc))
+    want_w = base + count_scatter_ref(jnp.asarray(pos), jnp.asarray(inc), size)
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(want_w))
+    got_1 = count_scatter_into_ref(base, jnp.asarray(pos), None)
+    want_1 = base + count_scatter_ref(
+        jnp.asarray(pos), jnp.ones(n, jnp.int32), size
+    )
+    np.testing.assert_array_equal(np.asarray(got_1), np.asarray(want_1))
+
+
+@pytest.mark.parametrize("n,h,w,tp,blk", [
+    (64, 32, 32, 128, 64),
+    (300, 60, 100, 256, 128),  # h*w not tile-aligned, n not block-aligned
+])
+def test_disk_accum_kernel_vs_ref(n, h, w, tp, blk):
+    rng = np.random.default_rng(n + h)
+    cx = jnp.asarray(rng.uniform(-10, w + 10, n).astype(np.float32))
+    cy = jnp.asarray(rng.uniform(-10, h + 10, n).astype(np.float32))
+    r = jnp.asarray(rng.uniform(-2, 12, n).astype(np.float32))
+    g = jnp.asarray(rng.integers(-2, 13, n).astype(np.int32))
+    want = disk_accum_ref(cx, cy, r, g, 11, h, w)
+    got = disk_accum_pallas(cx, cy, r, g, 11, h, w, tp=tp, blk=blk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("case", ["one_pixel", "zero_extent", "all_dead"])
+def test_disk_accum_adversarial(case):
+    """All nodes stacked in one pixel, a degenerate zero-extent layout
+    (every center identical — what a collapsed FA2 run produces), and an
+    all-dead scene (r ≤ 0 everywhere, the s_cap padding regime)."""
+    n, h, w = 96, 24, 40
+    rng = np.random.default_rng(11)
+    g = jnp.asarray(rng.integers(0, 11, n).astype(np.int32))
+    if case == "one_pixel":
+        # center 0.447px from pixel (13, 7), ≥ 0.632px from every other:
+        # r ∈ (0.5, 0.6) ⇒ every disk covers exactly that one pixel.
+        cx = jnp.full(n, 13.4, jnp.float32)
+        cy = jnp.full(n, 7.2, jnp.float32)
+        r = jnp.asarray(rng.uniform(0.5, 0.6, n).astype(np.float32))
+    elif case == "zero_extent":
+        cx = jnp.full(n, 20.0, jnp.float32)
+        cy = jnp.full(n, 12.0, jnp.float32)
+        r = jnp.asarray(rng.uniform(0.0, 6.0, n).astype(np.float32))
+    else:
+        cx = jnp.asarray(rng.uniform(0, w, n).astype(np.float32))
+        cy = jnp.asarray(rng.uniform(0, h, n).astype(np.float32))
+        r = jnp.asarray(-rng.uniform(0, 2, n).astype(np.float32))
+    want = disk_accum_ref(cx, cy, r, g, 11, h, w)
+    got = disk_accum_pallas(cx, cy, r, g, 11, h, w, tp=128, blk=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if case == "one_pixel":
+        assert int(np.asarray(want)[:, 7, 13].sum()) == n
+        assert int(np.asarray(want).sum()) == n
+    if case == "all_dead":
+        assert int(np.asarray(want).sum()) == 0
+
+
+def test_raster_ops_wrappers():
+    rng = np.random.default_rng(21)
+    pos = jnp.asarray(rng.integers(0, 200, 600).astype(np.int32))
+    inc = jnp.asarray(rng.integers(1, 3, 600).astype(np.int32))
+    a = raster_ops.count_scatter(pos, inc, 200, backend="ref")
+    b = raster_ops.count_scatter(pos, inc, 200, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # accumulating form: the aliased-in-place pallas path == ref
+    base = jnp.asarray(rng.integers(0, 4, 200).astype(np.int32))
+    for weights in (inc, None):
+        ia = raster_ops.count_scatter_into(base, pos, weights, backend="ref")
+        ib = raster_ops.count_scatter_into(
+            base, pos, weights, backend="interpret"
+        )
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    n = 80
+    cx = jnp.asarray(rng.uniform(0, 50, n).astype(np.float32))
+    cy = jnp.asarray(rng.uniform(0, 30, n).astype(np.float32))
+    r = jnp.asarray(rng.uniform(0, 5, n).astype(np.float32))
+    g = jnp.asarray(rng.integers(0, 11, n).astype(np.int32))
+    da = raster_ops.disk_accum(cx, cy, r, g, 11, 30, 50, backend="ref")
+    db = raster_ops.disk_accum(cx, cy, r, g, 11, 30, 50, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))

@@ -1,0 +1,236 @@
+"""Streaming rasterizer contracts (repro/render): chunked rendering is
+bit-identical to one-shot (the engine contract carried into the drawing
+stage), sources are interchangeable, PNG I/O round-trips, the hybrid node
+pass equals the dense kernel, and write_svg orientation + large-input
+delegation behave per the spec."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from dataclasses import replace
+
+from repro.core import biggraphvis, default_config, write_svg
+from repro.data.edge_store import write_npy
+from repro.graph import mode_degree, planted_partition
+from repro.kernels.raster import ops as raster_ops
+from repro.render import (
+    RenderConfig,
+    image_summary,
+    read_png,
+    render,
+    render_arrays,
+    write_png,
+)
+from repro.render.raster import _node_pass
+
+
+def _scene(seed=1, n=400, e=8000):
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(0, 100, (n, 2)).astype(np.float32)
+    radii = rng.uniform(1, 8, n).astype(np.float32)
+    radii[::9] = 0.0  # dead padding slots
+    groups = rng.integers(0, 11, n).astype(np.int32)
+    edges = rng.integers(0, n, (e, 2)).astype(np.int32)
+    return pos, radii, groups, edges
+
+
+CFG = RenderConfig(width=128, height=128, supersample=2, chunk_size=1024)
+
+
+# ------------------------------------------------- chunked == one-shot
+@pytest.mark.parametrize("chunk", [700, 1024, 4096])
+def test_chunked_render_bit_identical_to_oneshot(chunk):
+    pos, radii, groups, edges = _scene()
+    one, st1 = render_arrays(
+        pos, radii, groups, edges, cfg=replace(CFG, chunk_size=1 << 20)
+    )
+    assert st1.chunks == 1
+    img, st = render_arrays(
+        pos, radii, groups, edges, cfg=replace(CFG, chunk_size=chunk)
+    )
+    assert st.chunks > 1
+    np.testing.assert_array_equal(img, one)
+
+
+def test_chunked_render_weighted_bit_identical():
+    pos, radii, groups, edges = _scene()
+    w = np.random.default_rng(2).integers(1, 6, len(edges)).astype(np.float32)
+    one, _ = render_arrays(
+        pos, radii, groups, edges, edge_weights=w,
+        cfg=replace(CFG, chunk_size=1 << 20),
+    )
+    img, _ = render_arrays(
+        pos, radii, groups, edges, edge_weights=w,
+        cfg=replace(CFG, chunk_size=777),
+    )
+    np.testing.assert_array_equal(img, one)
+    # unit weights == no weights (the sorted unit-increment fast path)
+    a, _ = render_arrays(pos, radii, groups, edges, cfg=CFG)
+    b, _ = render_arrays(
+        pos, radii, groups, edges,
+        edge_weights=np.ones(len(edges), np.float32), cfg=CFG,
+    )
+    np.testing.assert_array_equal(a, b)
+
+
+def test_disk_store_source_matches_memory(tmp_path):
+    pos, radii, groups, edges = _scene()
+    path = write_npy(tmp_path / "edges.npy", edges)
+    a, _ = render_arrays(pos, radii, groups, edges, cfg=CFG)
+    b, stats = render_arrays(pos, radii, groups, path, cfg=CFG)
+    np.testing.assert_array_equal(a, b)
+    assert stats.stream.chunks == stats.chunks
+
+
+def test_render_residency_independent_of_edge_count():
+    pos, radii, groups, edges = _scene()
+    cfg = replace(CFG, draw_nodes=False)
+    _, st1 = render_arrays(pos, radii, groups, edges, cfg=cfg)
+    _, st4 = render_arrays(
+        pos, radii, groups, np.tile(edges, (4, 1)), cfg=cfg
+    )
+    assert st1.peak_device_bytes == st4.peak_device_bytes
+    assert st4.edges_streamed >= 4 * len(edges)
+
+
+# ------------------------------------------------------- node/edge passes
+def test_hybrid_node_pass_equals_dense_kernel():
+    rng = np.random.default_rng(5)
+    n, h, w = 300, 96, 80
+    px = rng.uniform(-10, w + 10, n).astype(np.float32)
+    py = rng.uniform(-10, h + 10, n).astype(np.float32)
+    r = rng.uniform(0, 25, n).astype(np.float32)  # spans small + large
+    r[::6] = 0.0
+    g = rng.integers(0, 11, n).astype(np.int32)
+    hyb = _node_pass(px, py, r, g, 11, h, w, "ref")
+    dense = raster_ops.disk_accum(
+        jnp.asarray(px), jnp.asarray(py), jnp.asarray(r), jnp.asarray(g),
+        11, h, w, "ref",
+    )
+    np.testing.assert_array_equal(np.asarray(hyb), np.asarray(dense))
+
+
+def test_all_padding_edge_chunks_draw_nothing():
+    """A stream of pure trash edges (id n) must leave the image equal to
+    the nodes-only render — the renderer's all-padding-chunk case."""
+    pos, radii, groups, _ = _scene()
+    n = len(pos)
+    trash = np.full((3000, 2), n, np.int32)
+    base, _ = render_arrays(pos, radii, groups, None, cfg=CFG)
+    img, stats = render_arrays(pos, radii, groups, trash, cfg=CFG)
+    np.testing.assert_array_equal(img, base)
+    assert stats.chunks >= 1
+
+
+def test_offscreen_edge_samples_dropped_not_clamped():
+    """Edges leaving the viewport (fitted to alive nodes only) must drop
+    their out-of-image samples, not clamp them onto border pixels."""
+    pos = np.array([[0.0, 0.0], [10.0, 0.0], [1000.0, 1000.0]], np.float32)
+    radii = np.array([0.01, 0.01, 0.0], np.float32)  # third node is dead
+    groups = np.array([3, 4, 5], np.int32)
+    edges = np.array([[0, 2], [1, 2]], np.int32)  # both point off-viewport
+    img, _ = render_arrays(pos, radii, groups, edges, cfg=CFG)
+    base, _ = render_arrays(pos, radii, groups, None, cfg=CFG)
+    # every sample of both edges lies outside the viewport: the edge pass
+    # must contribute nothing, and in particular no border streaks
+    np.testing.assert_array_equal(img, base)
+    border = np.concatenate(
+        [img[0], img[-1], img[:, 0], img[:, -1]]
+    ).reshape(-1, 3)
+    assert (border == 255).all(), "off-image edge samples smeared the border"
+
+
+def test_zero_extent_layout_renders():
+    """Collapsed layout (every node at one point) must not NaN — nodes
+    land on the image center."""
+    n = 50
+    pos = np.zeros((n, 2), np.float32)
+    radii = np.ones(n, np.float32)
+    groups = np.arange(n, dtype=np.int32) % 11
+    edges = np.stack([np.arange(n), (np.arange(n) + 1) % n], 1).astype(np.int32)
+    img, _ = render_arrays(pos, radii, groups, edges, cfg=CFG)
+    assert not np.array_equal(img, np.full_like(img, 255))
+    h, w = img.shape[:2]
+    assert (img[h // 2 - 2 : h // 2 + 2, w // 2 - 2 : w // 2 + 2] != 255).any()
+
+
+def test_render_content_and_summary():
+    pos, radii, groups, edges = _scene(n=600, e=12000)
+    img, _ = render_arrays(
+        pos, radii, groups, edges, cfg=replace(CFG, width=256, height=256)
+    )
+    frac, counts = image_summary(img)
+    assert frac > 0.01
+    assert (counts > 20).sum() >= 3  # several distinct palette colors
+
+
+def test_empty_scene_is_background():
+    pos = np.zeros((4, 2), np.float32)
+    img, stats = render_arrays(
+        pos, np.zeros(4, np.float32), np.zeros(4, np.int32), None, cfg=CFG
+    )
+    assert (img == 255).all()
+    assert stats.nodes_drawn == 0
+
+
+# ------------------------------------------------------------------ PNG I/O
+def test_png_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    img = rng.integers(0, 256, (37, 53, 3)).astype(np.uint8)
+    path = str(tmp_path / "t.png")
+    write_png(path, img)
+    np.testing.assert_array_equal(read_png(path), img)
+
+
+def test_png_rejects_bad_inputs(tmp_path):
+    with pytest.raises(ValueError, match="uint8"):
+        write_png(str(tmp_path / "x.png"), np.zeros((4, 4, 3), np.float32))
+    bad = tmp_path / "bad.png"
+    bad.write_bytes(b"not a png at all")
+    with pytest.raises(ValueError, match="not a PNG"):
+        read_png(str(bad))
+
+
+# ----------------------------------------------------------- pipeline wiring
+def test_render_result_and_biggraphvis_wiring(tmp_path):
+    n = 600
+    edges, _ = planted_partition(n, 12, 0.3, 0.002, seed=7)
+    cfg = default_config(n, len(edges), mode_degree(edges, n),
+                         rounds=2, iterations=10, s_cap=256)
+    out = str(tmp_path / "sg.png")
+    res = biggraphvis(edges, n, cfg, render_path=out,
+                      render_cfg=RenderConfig(width=96, height=96))
+    assert os.path.exists(out)
+    assert res.timings["render_s"] > 0
+    img = read_png(out)
+    assert img.shape == (96, 96, 3)
+    # direct render() of the same result is deterministic
+    img2, stats = render(res, cfg=RenderConfig(width=96, height=96))
+    np.testing.assert_array_equal(img2, img)
+    assert stats.nodes_drawn == res.n_supernodes
+
+
+# ------------------------------------------------------------------ write_svg
+def test_write_svg_y_axis_not_mirrored(tmp_path):
+    """World y-up must map to SVG y-down: the higher-y node gets the
+    smaller cy coordinate."""
+    pos = np.array([[0.0, 0.0], [0.0, 100.0]], np.float32)  # low, high
+    path = str(tmp_path / "o.svg")
+    out = write_svg(path, pos, np.ones(2), np.array([1, 2]))
+    assert out == path
+    svg = open(path).read()
+    circles = [ln for ln in svg.splitlines() if ln.startswith("<circle")]
+    cy = [float(c.split('cy="')[1].split('"')[0]) for c in circles]
+    assert cy[1] < cy[0], f"high-y node should draw above low-y node: {cy}"
+
+
+def test_write_svg_delegates_large_inputs_to_renderer(tmp_path):
+    pos, radii, groups, edges = _scene(n=50, e=500)
+    radii = np.maximum(radii, 1.0)
+    path = str(tmp_path / "big.svg")
+    out = write_svg(path, pos, radii, groups, edges=edges, max_nodes=10)
+    assert out.endswith(".png") and os.path.exists(out)
+    img = read_png(out)
+    frac, _ = image_summary(img)
+    assert frac > 0.001
