@@ -1,7 +1,9 @@
 """Benchmark harness entry point — one module per paper table/figure plus
-the roofline summary. Prints ``name,us_per_call,derived`` CSV.
+the engine benches and the roofline summary. Prints
+``name,us_per_call,derived`` CSV; ``--list`` prints the registry with each
+bench's one-line description.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--list] [--only fa2,agg]
 """
 from __future__ import annotations
 
@@ -14,9 +16,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="1 graph / fewer sweeps")
     ap.add_argument("--only", default="", help="comma-separated module subset")
+    ap.add_argument("--list", action="store_true",
+                    help="print the bench registry (name + one-line "
+                         "description) and exit")
     args = ap.parse_args()
 
-    from benchmarks import (agg_bench, fig_params, kernels_bench,
+    from benchmarks import (agg_bench, fa2_bench, fig_params, kernels_bench,
                             render_bench, roofline, stream_bench,
                             table1_speedup, table2_hashes, table3_rounds)
 
@@ -29,8 +34,15 @@ def main() -> None:
         "stream": stream_bench,
         "agg": agg_bench,
         "render": render_bench,
+        "fa2": fa2_bench,
         "roofline": roofline,
     }
+    if args.list:
+        width = max(map(len, modules))
+        for name, mod in modules.items():
+            desc = (mod.__doc__ or "").strip().splitlines()[0]
+            print(f"{name:<{width}}  {desc}")
+        return
     if args.only:
         keep = set(args.only.split(","))
         modules = {k: v for k, v in modules.items() if k in keep}

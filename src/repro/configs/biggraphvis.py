@@ -4,7 +4,11 @@ Two step kinds (DESIGN.md §4):
   * detect — one SCoDA streaming round + CMS sizing over *edge shards*
              (labels merge by all-reduce-min, sketches by all-reduce-add);
   * layout — one ForceAtlas2 iteration on the supergraph (n-body DP:
-             node tiles sharded, positions all-gathered).
+             node tiles sharded, positions all-gathered). The repulsion
+             backend is ``BGVDryConfig.layout_repulsion``: "exact" n²
+             tiles for supergraph shapes (the default), or the tiled
+             uniform-grid family ("grid"/"grid_pallas", kernels/grid)
+             when a cell lays out a full graph at paper scale.
 
 Shapes mirror the paper's biggest graphs (Table 1): soc-LiveJournal
 (4.0M nodes / 34.7M edges) and web-BerkStan (0.69M / 6.6M), plus the
@@ -34,6 +38,12 @@ class BGVDryConfig:
     name: str = "biggraphvis"
     rounds_per_step: int = 1
     cms_rows: int = 4
+    # FA2 repulsion backend for the layout cells (core/forceatlas2.py
+    # backend matrix): "exact" pairwise tiles for supergraph shapes,
+    # "grid"/"grid_pallas" for full-graph shapes at paper scale.
+    layout_repulsion: str = "exact"
+    layout_grid_size: int = 64
+    layout_grid_window: int = 32
 
 
 def biggraphvis() -> ArchConfig:

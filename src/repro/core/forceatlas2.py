@@ -11,11 +11,35 @@ supernodes (paper §4.1: radius ∝ √size; repulsion distance shifted by
 radii so big supernodes get the space they need).
 
 Repulsion backends (``repulsion=``):
-  * "exact"  — tiled O(n²) pairwise (Pallas kernel on TPU, chunked jnp on
-               CPU) — the right choice for supergraphs (n ≤ ~2·10⁵), where
-               n² elementwise beats tree codes on a systolic machine;
-  * "grid"   — uniform-grid monopole far-field: the TPU-native analogue of
-               Barnes–Hut (DESIGN.md §2) for full-graph layouts.
+
+  * "exact"       — tiled O(n²) pairwise (Pallas kernel on TPU, chunked jnp
+                    on CPU; kernels/repulsion). The right choice for
+                    supergraphs (n ≤ ~2·10⁵), where n² elementwise beats
+                    tree codes on a systolic machine, and the only backend
+                    honoring ``use_radii``.
+  * "grid"        — uniform-grid monopole far field + banded same-cell
+                    near field (kernels/grid), auto-dispatched: Pallas
+                    tiles on TPU, the chunked/shifted XLA path elsewhere.
+                    O(n·(G² + W)) work with an O(tile·G²) live set — the
+                    full-graph fast path (n ≳ 10⁵, up to paper scale).
+  * "grid_pallas" — same math, Pallas kernels forced (interpret mode off
+                    TPU; for validation and kernel benchmarking).
+  * "grid_dense"  — the legacy dense formulation materializing an
+                    [n, G², 2] far-field tensor per iteration (≈100 GB at
+                    the paper's 3M nodes with G=64). Kept only as the
+                    baseline ``benchmarks/fa2_bench.py`` measures the tiled
+                    backends against — do not use at scale.
+
+``layout`` hoists everything reusable out of the iteration scan: positions,
+weights and mass live in ``cfg.dtype``; radii √mass are computed once per
+call; attraction edges are pre-sorted once into a directed segment layout
+and accumulated per iteration with one sorted ``kernels/segment``
+segment-sum (``indices_are_sorted`` fast path) instead of two unsorted
+scatter-adds; and the grid backends carry (cell ids, cell-sorted order)
+through the scan, rebuilding them every ``grid_rebuild`` iterations
+(default 1 = rebuild each step, the exact legacy semantics; larger values
+amortize the per-iteration argsort against slightly stale binning —
+monopole masses/centroids always track the current positions).
 
 Iterations run under ``lax.scan``; 100 iterations suffice for supergraphs
 (paper §4.2.3) vs 500 for full graphs.
@@ -28,7 +52,9 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.grid import ops as grid_ops
 from repro.kernels.repulsion import ops as repulsion_ops
+from repro.kernels.segment import ops as segment_ops
 
 
 @dataclass(frozen=True)
@@ -38,16 +64,21 @@ class FA2Config:
     repulsion_k: float = 80.0  # paper §5.1: kr = 80, kg = 1 for all networks
     strong_gravity: bool = False
     jitter_tolerance: float = 1.0  # τ in the FA2 speed controller
-    repulsion: str = "exact"  # "exact" | "grid"
+    repulsion: str = "exact"  # "exact" | "grid" | "grid_pallas" | "grid_dense"
     grid_size: int = 64
-    grid_window: int = 32  # near-field band half-width of "grid" repulsion
+    grid_window: int = 32  # near-field band half-width of grid repulsion
+    grid_rebuild: int = 1  # re-bin/re-sort cells every k iterations
     use_radii: bool = True  # supernode radii shift repulsion distances
     seed: int = 0
-    dtype: str = "float32"
+    dtype: str = "float32"  # position/force dtype of the layout loop
 
 
-def init_positions(n: int, key: jax.Array, scale: float = 1000.0) -> jnp.ndarray:
-    return jax.random.uniform(key, (n, 2), minval=-scale, maxval=scale)
+def init_positions(
+    n: int, key: jax.Array, scale: float = 1000.0, dtype: str = "float32"
+) -> jnp.ndarray:
+    return jax.random.uniform(
+        key, (n, 2), minval=-scale, maxval=scale, dtype=jnp.dtype(dtype)
+    )
 
 
 def _gravity(pos, mass, cfg: FA2Config):
@@ -59,7 +90,11 @@ def _gravity(pos, mass, cfg: FA2Config):
 
 
 def _attraction(pos, edges, weights, n: int):
-    """Σ over incident edges of w·(x_other − x_self); padded slots hit trash."""
+    """Σ over incident edges of w·(x_other − x_self); padded slots hit trash.
+
+    Unsorted two-scatter form — the single-``step`` path. ``layout``
+    pre-sorts the edges once and uses ``_attraction_sorted`` instead.
+    """
     u, v = edges[:, 0], edges[:, 1]
     pos_ext = jnp.concatenate([pos, jnp.zeros((1, 2), pos.dtype)])
     delta = pos_ext[v] - pos_ext[u]  # force on u toward v
@@ -69,6 +104,37 @@ def _attraction(pos, edges, weights, n: int):
     force = force.at[v].add(-f)
     return force[:n]
 
+
+def _attraction_edge_layout(edges, weights):
+    """Directed segment layout, built once per ``layout`` call: both edge
+    directions concatenated and sorted by source node, so each iteration's
+    accumulation is one sorted segment-sum. Padded slots (trash endpoints
+    == n) sort last and are dropped by the segment-sum's range check."""
+    u, v = edges[:, 0], edges[:, 1]
+    src = jnp.concatenate([u, v])
+    dst = jnp.concatenate([v, u])
+    w2 = jnp.concatenate([weights, weights])
+    order = jnp.argsort(src)
+    return src[order], dst[order], w2[order]
+
+
+def _attraction_sorted(pos, src, dst, w, n: int):
+    """Σ over directed incident edges of w·(x_dst − x_src), src-sorted —
+    the kernels/segment ``indices_are_sorted`` fast path.
+
+    Pinned to the XLA ref backend: this sum has *n* segments, and the
+    one-hot-matmul Pallas kernel streams every edge block once per node
+    tile — O(n/tn · E) at full-graph n, where the sorted scatter is O(E).
+    That kernel is for small-segment-count sums (supergraph aggregation,
+    grid cell stats), not node-sized ones.
+    """
+    pos_ext = jnp.concatenate([pos, jnp.zeros((1, 2), pos.dtype)])
+    f = w[:, None] * (pos_ext[dst] - pos_ext[src])
+    return segment_ops.segment_sum(
+        f, src, n, backend="ref", indices_are_sorted=True
+    )
+
+
 def _pair_force(dpos, mi, mj, kr):
     """kr·mi·mj/d along the unit vector, for a [..., 2] displacement."""
     d2 = jnp.sum(dpos * dpos, axis=-1)
@@ -77,16 +143,13 @@ def _pair_force(dpos, mi, mj, kr):
 
 
 def _grid_repulsion(pos, mass, cfg: FA2Config):
-    """Uniform-grid repulsion — the TPU-native Barnes–Hut analogue.
+    """Dense uniform-grid repulsion — the ``grid_dense`` baseline.
 
-    Far field: bin nodes into G×G cells (segment-sum centroids/masses —
-    structured, gatherable) and let every node interact with every cell
-    *monopole*; this mirrors BH's θ-acceptance of coarse cells. Near field:
-    BH recurses inside the node's own region, so we subtract the own-cell
-    monopole and replace it with *exact* pairwise interaction against
-    same-cell nodes, found contiguously after a sort-by-cell (a
-    ±``cfg.grid_window`` band — exact for cells with ≤ grid_window
-    members). O(n·(G² + grid_window)), fully dense ops, no pointer chasing.
+    Same monopole-far-field + banded-near-field math as kernels/grid, in
+    the original fully-materialized form: an [n, G², 2] far-field tensor
+    plus an [n, 2W+1] near-field gather per call. Superseded by the tiled
+    backends ("grid"/"grid_pallas"); retained as the benchmark baseline
+    (benchmarks/fa2_bench.py) and as a semantics oracle in tests.
     """
     g = cfg.grid_size
     window = cfg.grid_window
@@ -128,19 +191,23 @@ def _grid_repulsion(pos, mass, cfg: FA2Config):
     return force
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n"))
-def step(state, edges, weights, mass, radii, cfg: FA2Config, n: int):
-    """One FA2 iteration (Algorithm 1 body): forces → speeds → displacement."""
-    pos, prev_force, global_speed = state
-    f = _gravity(pos, mass, cfg)
-    f = f + _attraction(pos, edges, weights, n)
-    if cfg.repulsion == "grid":
-        f = f + _grid_repulsion(pos, mass, cfg)
-    else:
-        r = radii if cfg.use_radii else None
-        f = f + repulsion_ops.repulsion(pos, mass, cfg.repulsion_k, radii=r)
+def _repulsion_forces(pos, mass, radii, cfg: FA2Config, cell=None, order=None):
+    """Dispatch one iteration's repulsion to the configured backend."""
+    if cfg.repulsion == "grid_dense":
+        return _grid_repulsion(pos, mass, cfg)
+    if cfg.repulsion in ("grid", "grid_pallas"):
+        backend = "auto" if cfg.repulsion == "grid" else "pallas"
+        return grid_ops.grid_repulsion(
+            pos, mass, cfg.repulsion_k, cfg.grid_size, cfg.grid_window,
+            cell=cell, order=order, backend=backend,
+        )
+    r = radii if cfg.use_radii else None
+    return repulsion_ops.repulsion(pos, mass, cfg.repulsion_k, radii=r)
 
-    # Swing / traction (FA2 §"speed optimization").
+
+def _apply_speed(state, f, mass, cfg: FA2Config):
+    """FA2 speed controller (Algorithm 1): swing/traction → displacement."""
+    pos, prev_force, global_speed = state
     swing = jnp.linalg.norm(f - prev_force, axis=-1)
     traction = 0.5 * jnp.linalg.norm(f + prev_force, axis=-1)
     g_swing = jnp.sum(mass * swing) + 1e-9
@@ -157,6 +224,21 @@ def step(state, edges, weights, mass, radii, cfg: FA2Config, n: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
+def step(state, edges, weights, mass, radii, cfg: FA2Config, n: int):
+    """One FA2 iteration (Algorithm 1 body): forces → speeds → displacement.
+
+    Single-step public API (launch/steps.py builds the distributed layout
+    cell on it): edge scatter and grid binning run inside the call.
+    ``layout`` hoists both out of its scan — prefer it for full runs.
+    """
+    pos, _, _ = state
+    f = _gravity(pos, mass, cfg)
+    f = f + _attraction(pos, edges, weights, n)
+    f = f + _repulsion_forces(pos, mass, radii, cfg)
+    return _apply_speed(state, f, mass, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n"))
 def layout(
     edges: jnp.ndarray,
     weights: jnp.ndarray,
@@ -166,14 +248,52 @@ def layout(
     pos0: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Run ``cfg.iterations`` FA2 steps. Returns (positions [n,2], trace)."""
+    dtype = jnp.dtype(cfg.dtype)
     key = jax.random.PRNGKey(cfg.seed)
-    pos = init_positions(n, key) if pos0 is None else pos0
+    pos = (
+        init_positions(n, key, dtype=cfg.dtype)
+        if pos0 is None
+        else pos0.astype(dtype)
+    )
+    weights = weights.astype(dtype)
+    mass = mass.astype(dtype)
+    # Hoisted per-call prep (once per layout, not once per iteration):
     radii = jnp.sqrt(jnp.maximum(mass, 0.0))  # paper: radius ∝ √size
-    state = (pos, jnp.zeros_like(pos), jnp.asarray(1.0, pos.dtype))
+    src, dst, w2 = _attraction_edge_layout(edges, weights)
 
-    def body(state, _):
-        state, fmag = step(state, edges, weights, mass, radii, cfg, n)
-        return state, jnp.max(fmag)
+    grid_state = cfg.repulsion in ("grid", "grid_pallas")
+    # Carry (cell, order) through the scan only when a rebuild cadence > 1
+    # actually reuses them; iteration 0 always rebuilds (0 % k == 0), so
+    # the seed is never read and can be zeros.
+    carry_grid = grid_state and cfg.grid_rebuild > 1
+    state = (pos, jnp.zeros_like(pos), jnp.asarray(1.0, dtype))
+    if carry_grid:
+        z = jnp.zeros(n, jnp.int32)
+        state = state + (z, z)
 
-    state, trace = jax.lax.scan(body, state, None, length=cfg.iterations)
+    def body(state, it):
+        if carry_grid:
+            pos, prev_f, gs, cell, order = state
+            cell, order = jax.lax.cond(
+                it % cfg.grid_rebuild == 0,
+                lambda: grid_ops.bin_and_sort(pos, cfg.grid_size),
+                lambda: (cell, order),
+            )
+            core = (pos, prev_f, gs)
+        else:
+            core = state
+            pos = core[0]
+            if grid_state:
+                cell, order = grid_ops.bin_and_sort(pos, cfg.grid_size)
+            else:
+                cell = order = None
+        f = _gravity(pos, mass, cfg)
+        f = f + _attraction_sorted(pos, src, dst, w2, n)
+        f = f + _repulsion_forces(pos, mass, radii, cfg, cell=cell, order=order)
+        core, fmag = _apply_speed(core, f, mass, cfg)
+        if carry_grid:
+            return core + (cell, order), jnp.max(fmag)
+        return core, jnp.max(fmag)
+
+    state, trace = jax.lax.scan(body, state, jnp.arange(cfg.iterations))
     return state[0], trace

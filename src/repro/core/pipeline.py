@@ -65,13 +65,26 @@ def default_config(
     rounds: int = 4,
     iterations: int = 100,
     s_cap: int | None = None,
+    repulsion: str = "exact",
+    grid_size: int = 64,
+    grid_window: int = 32,
+    grid_rebuild: int = 1,
 ) -> BGVConfig:
-    """Paper defaults: 4 hash rows, cols ≈ 1e-4·|E| (min 256), δ = mode degree."""
+    """Paper defaults: 4 hash rows, cols ≈ 1e-4·|E| (min 256), δ = mode degree.
+
+    ``repulsion``/``grid_*`` select the FA2 backend for the supergraph
+    layout and seed the grid parameters ``full_layout_colored`` reuses
+    (see the backend matrix in core/forceatlas2.py): "exact" is right for
+    supergraphs; "grid"/"grid_pallas" are the tiled full-graph fast path.
+    """
     cols = max(256, n_edges // 1000)
     return BGVConfig(
         scoda=ScodaConfig(degree_threshold=degree_threshold, rounds=rounds),
         cms=cms_lib.CMSConfig(rows=4, cols=cols),
-        layout=fa2.FA2Config(iterations=iterations),
+        layout=fa2.FA2Config(
+            iterations=iterations, repulsion=repulsion, grid_size=grid_size,
+            grid_window=grid_window, grid_rebuild=grid_rebuild,
+        ),
         s_cap=s_cap or min(n_nodes, 65536),
         max_super_edges=min(4 * n_edges, 262144),
     )
@@ -177,7 +190,13 @@ def full_layout_colored(
     edges_np: np.ndarray, n_nodes: int, cfg: BGVConfig, iterations: int = 500
 ) -> tuple[np.ndarray, np.ndarray]:
     """Paper's comparison/styling path: full-graph FA2 (grid repulsion for
-    scale) + BigGraphVis community colors. Returns (pos [n,2], groups [n])."""
+    scale) + BigGraphVis community colors. Returns (pos [n,2], groups [n]).
+
+    ``cfg.layout.repulsion == "exact"`` (the supergraph default) is treated
+    as "unset" here and upgraded to the tiled "grid" backend above 4096
+    nodes — an exact full-graph layout at larger n is a deliberate O(n²)
+    choice; call ``fa2.layout`` directly for that.
+    """
     e_cap = len(edges_np)
     edges = jnp.asarray(pad_edges(edges_np, e_cap, n_nodes))
     deg = degrees(edges, n_nodes)
@@ -185,14 +204,24 @@ def full_layout_colored(
     sg = build_supergraph(
         edges, labels, deg, n_nodes, cfg.s_cap, cfg.max_super_edges, cfg.cms
     )
+    # Full-graph scale wants the tiled grid family; honor an explicit grid
+    # backend choice from the config, defaulting to the auto-dispatched
+    # "grid" (Pallas on TPU, chunked XLA elsewhere) above 4096 nodes.
+    repulsion = (
+        cfg.layout.repulsion
+        if cfg.layout.repulsion != "exact"
+        else ("grid" if n_nodes > 4096 else "exact")
+    )
     lcfg = fa2.FA2Config(
         iterations=iterations,
-        repulsion="grid" if n_nodes > 4096 else "exact",
+        repulsion=repulsion,
         grid_size=cfg.layout.grid_size,
         grid_window=cfg.layout.grid_window,
+        grid_rebuild=cfg.layout.grid_rebuild,
         use_radii=False,
         gravity=cfg.layout.gravity,
         repulsion_k=cfg.layout.repulsion_k,
+        dtype=cfg.layout.dtype,
     )
     mass = deg.astype(jnp.float32) + 1.0
     w = jnp.ones(edges.shape[0], jnp.float32)

@@ -1,0 +1,137 @@
+"""XLA reference path for the uniform-grid repulsion family.
+
+The dense formulation (``core/forceatlas2._grid_repulsion``, kept as the
+``grid_dense`` benchmark baseline) materializes a ``[n, G², 2]`` far-field
+tensor every iteration — ≈100 GB at the paper's 3M-node scale with G=64 —
+plus an ``[n, 2W+1]`` gathered near-field block. This module computes the
+same forces from cache-sized pieces:
+
+* ``far_field_ref`` — a ``lax.scan`` over node chunks: each chunk of ``nb``
+  nodes interacts with every cell monopole as a dense ``[nb, G²]`` block,
+  so the live set is O(nb·G²) — independent of n. The own-cell monopole is
+  masked inside the pair block (fused), where the dense baseline adds it
+  and then subtracts it again.
+* ``near_field_ref`` — the exact same-cell band over the cell-sorted order
+  expressed as 2W+1 shifted passes (``jnp.roll`` + mask), replacing the
+  ``[n, 2W+1]`` gather: pure vector ops, O(n) live memory.
+
+Binning helpers (``bin_nodes`` / ``bin_and_sort``) are shared by every
+backend; the Pallas counterparts of the two field kernels live in
+``tiled.py``, dispatch in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# d² clamp of the monopole/near force magnitude kr·mi·mj/d² (matches
+# core/forceatlas2._pair_force — the grid family works on squared
+# distances, unlike the exact kernels' d·(d − radii) denominator).
+EPS2 = 1e-4
+
+
+def bin_nodes(pos: jnp.ndarray, grid_size: int) -> jnp.ndarray:
+    """Flat G×G cell id per node ([n] int32) from the positions' bbox."""
+    g = grid_size
+    pos = pos.astype(jnp.float32)
+    lo = jnp.min(pos, axis=0)
+    hi = jnp.max(pos, axis=0)
+    extent = jnp.maximum(hi - lo, 1e-6)
+    cell2d = jnp.clip(((pos - lo) / extent * g).astype(jnp.int32), 0, g - 1)
+    return cell2d[:, 0] * g + cell2d[:, 1]
+
+
+def bin_and_sort(pos: jnp.ndarray, grid_size: int):
+    """(cell ids [n] int32, cell-sorted order [n] int32) for a layout.
+
+    The pair is the grid state the FA2 scan carries and rebuilds every
+    ``grid_rebuild`` iterations (core/forceatlas2.layout): the argsort is
+    the amortizable cost, the per-iteration monopole stats are not.
+    """
+    cell = bin_nodes(pos, grid_size)
+    return cell, jnp.argsort(cell).astype(jnp.int32)
+
+
+def _pad_chunks(x, nb, fill=0.0):
+    n = x.shape[0]
+    n_pad = ((n + nb - 1) // nb) * nb
+    pad = [(0, n_pad - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill).reshape(
+        (n_pad // nb, nb) + x.shape[1:]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("kr", "nb"))
+def far_field_ref(
+    pos: jnp.ndarray,  # [n, 2] f32 (any order)
+    mass: jnp.ndarray,  # [n] f32 (padding must carry mass 0)
+    cell: jnp.ndarray,  # [n] int32 cell id per node
+    ccent: jnp.ndarray,  # [C, 2] f32 cell centroids
+    cmass: jnp.ndarray,  # [C] f32 cell masses (empty cell = 0 = force-dead)
+    kr: float,
+    nb: int = 1024,
+) -> jnp.ndarray:
+    """Monopole far field, own cell excluded → [n, 2]. O(nb·C) live set."""
+    n = pos.shape[0]
+    cx = ccent[:, 0][None, :]  # [1, C]
+    cy = ccent[:, 1][None, :]
+    cm = cmass[None, :]
+    cells = jnp.arange(ccent.shape[0], dtype=jnp.int32)[None, :]
+
+    def body(_, blk):
+        p, m, ci = blk  # [nb, 2], [nb], [nb]
+        dx = p[:, 0:1] - cx  # [nb, C]
+        dy = p[:, 1:2] - cy
+        d2 = dx * dx + dy * dy
+        mag = kr * m[:, None] * cm / jnp.maximum(d2, EPS2)
+        mag = jnp.where(ci[:, None] == cells, 0.0, mag)  # fused own-cell mask
+        return None, jnp.stack(
+            [jnp.sum(mag * dx, axis=1), jnp.sum(mag * dy, axis=1)], axis=1
+        )
+
+    _, out = jax.lax.scan(
+        body,
+        None,
+        (
+            _pad_chunks(pos, nb),
+            _pad_chunks(mass, nb),
+            _pad_chunks(cell, nb, fill=-1),
+        ),
+    )
+    return out.reshape(-1, 2)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("kr", "window"))
+def near_field_ref(
+    pos_s: jnp.ndarray,  # [n, 2] f32, cell-sorted order
+    mass_s: jnp.ndarray,  # [n] f32, cell-sorted
+    cell_s: jnp.ndarray,  # [n] int32, sorted (same-cell runs contiguous)
+    kr: float,
+    window: int,
+) -> jnp.ndarray:
+    """Exact same-cell pairwise forces over a ±window band of the sorted
+    order → [n, 2] (sorted order). Exact for cells with ≤ window members."""
+    n = pos_s.shape[0]
+    idx = jnp.arange(n)
+    x, y = pos_s[:, 0], pos_s[:, 1]
+
+    def body(acc, k):
+        # Neighbor j = i + k via a shifted view: rolled[i] = arr[(i+k) % n];
+        # the in-range mask discards the wrapped entries.
+        xs = jnp.roll(x, -k)
+        ys = jnp.roll(y, -k)
+        ms = jnp.roll(mass_s, -k)
+        cs = jnp.roll(cell_s, -k)
+        j = idx + k
+        ok = (j >= 0) & (j < n) & (k != 0) & (cs == cell_s)
+        dx = x - xs
+        dy = y - ys
+        d2 = dx * dx + dy * dy
+        mag = jnp.where(ok, kr * mass_s * ms / jnp.maximum(d2, EPS2), 0.0)
+        return (acc[0] + mag * dx, acc[1] + mag * dy), None
+
+    init = (jnp.zeros_like(x), jnp.zeros_like(y))
+    (fx, fy), _ = jax.lax.scan(body, init, jnp.arange(-window, window + 1))
+    return jnp.stack([fx, fy], axis=1)

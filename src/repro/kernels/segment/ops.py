@@ -13,10 +13,16 @@ def segment_sum(
     seg_ids: jnp.ndarray,
     n_segments: int,
     backend: str = "auto",
+    indices_are_sorted: bool = False,
 ) -> jnp.ndarray:
+    """``indices_are_sorted`` promises sorted ``seg_ids`` (same result,
+    faster scatter lowering on the ref path; the one-hot-matmul Pallas
+    kernel is insensitive to input order and ignores the hint)."""
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
     if backend == "ref":
-        return segment_sum_ref(data, seg_ids, n_segments)
+        return segment_sum_ref(
+            data, seg_ids, n_segments, indices_are_sorted=indices_are_sorted
+        )
     interpret = backend == "interpret" or jax.default_backend() != "tpu"
     return segment_sum_pallas(data, seg_ids, n_segments, interpret=interpret)

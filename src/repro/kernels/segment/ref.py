@@ -9,5 +9,16 @@ import jax
 import jax.numpy as jnp
 
 
-def segment_sum_ref(data: jnp.ndarray, seg_ids: jnp.ndarray, n_segments: int) -> jnp.ndarray:
-    return jax.ops.segment_sum(data, seg_ids, num_segments=n_segments)
+def segment_sum_ref(
+    data: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    n_segments: int,
+    indices_are_sorted: bool = False,
+) -> jnp.ndarray:
+    """``indices_are_sorted=True`` promises sorted ``seg_ids`` — XLA lowers
+    the scatter without the dedup/ordering guards (the fast path the
+    FA2 attraction and grid monopole stats ride)."""
+    return jax.ops.segment_sum(
+        data, seg_ids, num_segments=n_segments,
+        indices_are_sorted=indices_are_sorted,
+    )

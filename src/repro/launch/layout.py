@@ -49,6 +49,18 @@ def main() -> None:
     ap.add_argument("--iterations", type=int, default=100)
     ap.add_argument("--threshold", type=int, default=0, help="0 = mode degree (paper)")
     ap.add_argument("--s-cap", type=int, default=65536)
+    ap.add_argument("--repulsion", default="exact",
+                    choices=("exact", "grid", "grid_pallas", "grid_dense"),
+                    help="FA2 repulsion backend (core/forceatlas2.py matrix: "
+                         "exact n² tiles for supergraphs, tiled grid for "
+                         "full-graph scale)")
+    ap.add_argument("--grid-size", type=int, default=64,
+                    help="G for the grid backends (G×G cells)")
+    ap.add_argument("--grid-window", type=int, default=32,
+                    help="near-field band half-width of grid repulsion")
+    ap.add_argument("--grid-rebuild", type=int, default=1,
+                    help="re-bin/re-sort grid cells every k iterations "
+                         "(1 = every iteration, exact semantics)")
     args = ap.parse_args()
 
     edges, n = load_edges(args.edges)
@@ -57,7 +69,10 @@ def main() -> None:
 
     cfg = default_config(n, len(edges), delta, rounds=args.rounds,
                          iterations=args.iterations,
-                         s_cap=min(args.s_cap, n))
+                         s_cap=min(args.s_cap, n),
+                         repulsion=args.repulsion, grid_size=args.grid_size,
+                         grid_window=args.grid_window,
+                         grid_rebuild=args.grid_rebuild)
     t0 = time.perf_counter()
     res = biggraphvis(edges, n, cfg)
     print(f"BigGraphVis: {res.n_supernodes} supernodes / {res.n_superedges} "

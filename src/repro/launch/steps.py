@@ -318,7 +318,15 @@ def build_bgv_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
                          out_shardings=(node_rep, node_rep, node_rep))
 
     # bgv_layout: one FA2 iteration on the supergraph, node tiles sharded.
-    cfg = fa2.FA2Config(iterations=1, use_radii=True)
+    # The repulsion backend comes from the arch config (exact n² tiles for
+    # supergraph shapes; the tiled grid family for full-graph cells).
+    model = arch.model
+    cfg = fa2.FA2Config(
+        iterations=1, use_radii=True,
+        repulsion=getattr(model, "layout_repulsion", "exact"),
+        grid_size=getattr(model, "layout_grid_size", 64),
+        grid_window=getattr(model, "layout_grid_window", 32),
+    )
 
     def layout_step(pos, prev_f, mass, radii, edges, weights):
         state = (pos, prev_f, jnp.float32(1.0))

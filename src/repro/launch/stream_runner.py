@@ -98,6 +98,12 @@ def main() -> None:
                     help="superedge aggregation: two-level sorted-merge "
                          "(kernels/merge) or the lexsort re-sort baseline")
     ap.add_argument("--iterations", type=int, default=30)
+    ap.add_argument("--repulsion", default="exact",
+                    choices=("exact", "grid", "grid_pallas", "grid_dense"),
+                    help="FA2 repulsion backend for the supergraph layout "
+                         "(core/forceatlas2.py backend matrix)")
+    ap.add_argument("--grid-rebuild", type=int, default=1,
+                    help="re-bin/re-sort grid cells every k layout iterations")
     ap.add_argument("--seed", type=int, default=5)
     ap.add_argument("--source", choices=("memory", "npy", "bin", "shards"),
                     default="memory",
@@ -116,7 +122,9 @@ def main() -> None:
     print(f"graph: {n} nodes, {len(edges)} edges, mode degree δ={delta}")
 
     cfg = default_config(n, len(edges), delta, rounds=args.rounds,
-                         iterations=args.iterations)
+                         iterations=args.iterations,
+                         repulsion=args.repulsion,
+                         grid_rebuild=args.grid_rebuild)
     cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=args.block_size))
 
     res_one = biggraphvis(edges, n, cfg)

@@ -1,6 +1,13 @@
-"""ForceAtlas2 layout behaviour + modularity vs networkx oracle."""
+"""ForceAtlas2 layout behaviour + modularity vs networkx oracle, plus the
+tiled grid-repulsion family (kernels/grid): ref/Pallas parity on
+adversarial inputs, grid-vs-exact agreement, and layout-level contracts
+(backend parity, dtype threading, rebuild cadence)."""
+import dataclasses
+
+import jax
 import networkx as nx
 import numpy as np
+import pytest
 import jax.numpy as jnp
 
 from repro.core import forceatlas2 as fa2
@@ -8,6 +15,7 @@ from repro.core.coloring import color_groups
 from repro.core.modularity import modularity
 from repro.graph import planted_partition, pad_edges
 from repro.graph.utils import degrees
+from repro.kernels.grid import ops as grid_ops
 
 
 def test_modularity_matches_networkx():
@@ -71,6 +79,163 @@ def test_grid_repulsion_close_to_exact():
         np.linalg.norm(f_grid, axis=-1) * np.linalg.norm(f_exact, axis=-1) + 1e-9
     )
     assert np.median(cos) > 0.8
+
+
+def _grid_cases():
+    """Adversarial inputs for the grid kernels (name, pos, mass, g, window)."""
+    rng = np.random.default_rng(11)
+    uniform = rng.uniform(-500, 500, (300, 2)).astype(np.float32)
+    return [
+        # every node in the single cell of a 1×1 grid: far field vanishes,
+        # near field is exact pairwise within the band
+        ("one-cell", uniform[:64], np.full(64, 2.0, np.float32), 1, 64),
+        # zero-extent layout: all positions identical
+        ("zero-extent", np.full((32, 2), 3.5, np.float32),
+         np.ones(32, np.float32), 8, 4),
+        # most cells empty (n ≪ G²)
+        ("empty-cells", uniform[:48], np.ones(48, np.float32), 32, 8),
+        # cell occupancy far above the window: band truncates, both
+        # backends must truncate identically
+        ("occupancy>window", rng.uniform(-1, 1, (256, 2)).astype(np.float32),
+         np.ones(256, np.float32), 2, 4),
+        # window 0: far field only
+        ("window-0", uniform, rng.uniform(1, 3, 300).astype(np.float32), 8, 0),
+        ("generic", uniform, rng.uniform(1, 5, 300).astype(np.float32), 16, 32),
+    ]
+
+
+@pytest.mark.parametrize("name,pos,mass,g,window", _grid_cases(),
+                         ids=[c[0] for c in _grid_cases()])
+def test_grid_kernels_interpret_vs_ref(name, pos, mass, g, window):
+    """Pallas grid kernels (interpret mode) match the XLA ref path on
+    adversarial inputs."""
+    pos, mass = jnp.asarray(pos), jnp.asarray(mass)
+    f_ref = np.asarray(
+        grid_ops.grid_repulsion(pos, mass, 80.0, g, window, backend="ref"))
+    f_pal = np.asarray(
+        grid_ops.grid_repulsion(pos, mass, 80.0, g, window, backend="interpret"))
+    assert np.isfinite(f_ref).all() and np.isfinite(f_pal).all()
+    scale = max(np.abs(f_ref).max(), 1.0)
+    np.testing.assert_allclose(f_pal, f_ref, rtol=2e-4, atol=2e-4 * scale)
+
+
+def test_grid_tiled_matches_dense():
+    """The tiled grid path reproduces the dense [n, G², 2] formulation
+    (grid_dense) to float32 tolerance — same binning, same band."""
+    rng = np.random.default_rng(6)
+    n = 400
+    pos = jnp.asarray(rng.uniform(-800, 800, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(1, 6, n).astype(np.float32))
+    cfg = fa2.FA2Config(repulsion="grid_dense", grid_size=16, grid_window=32,
+                        use_radii=False)
+    f_dense = np.asarray(fa2._grid_repulsion(pos, mass, cfg))
+    f_tiled = np.asarray(grid_ops.grid_repulsion(
+        pos, mass, cfg.repulsion_k, cfg.grid_size, cfg.grid_window,
+        backend="ref"))
+    scale = np.abs(f_dense).max()
+    np.testing.assert_allclose(f_tiled, f_dense, rtol=1e-3, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_grid_backends_close_to_exact(backend):
+    """Tolerance-bounded grid-vs-exact agreement: the tiled far+near field
+    approximates exact pairwise repulsion directionally (median cosine
+    similarity of force vectors ≥ 0.8), like the dense grid before it."""
+    rng = np.random.default_rng(4)
+    n = 256
+    pos = jnp.asarray(rng.uniform(-500, 500, size=(n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(1, 5, size=n).astype(np.float32))
+    f_grid = np.asarray(
+        grid_ops.grid_repulsion(pos, mass, 80.0, 16, 32, backend=backend))
+    from repro.kernels.repulsion.ref import repulsion_ref
+
+    f_exact = np.asarray(repulsion_ref(pos, mass, 80.0))
+    cos = np.sum(f_grid * f_exact, -1) / (
+        np.linalg.norm(f_grid, axis=-1) * np.linalg.norm(f_exact, axis=-1) + 1e-9
+    )
+    assert np.median(cos) > 0.8
+
+
+def _small_layout_inputs(n=220, seed=8):
+    edges_np, _ = planted_partition(n, 4, 0.3, 0.02, seed=seed)
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    mass = degrees(edges, n).astype(jnp.float32) + 1.0
+    w = jnp.ones(edges.shape[0], jnp.float32)
+    return edges, w, mass, n
+
+
+def test_layout_grid_pallas_matches_grid():
+    """Layout parity: repulsion="grid_pallas" (interpret off-TPU) matches
+    repulsion="grid" to float32 tolerance on a fixed seed."""
+    edges, w, mass, n = _small_layout_inputs()
+    base = fa2.FA2Config(iterations=8, repulsion="grid", grid_size=8,
+                         use_radii=False, seed=7)
+    pos_ref, _ = fa2.layout(edges, w, mass, n, base)
+    pal = dataclasses.replace(base, repulsion="grid_pallas")
+    pos_pal, _ = fa2.layout(edges, w, mass, n, pal)
+    pos_ref, pos_pal = np.asarray(pos_ref), np.asarray(pos_pal)
+    assert np.isfinite(pos_ref).all()
+    scale = np.abs(pos_ref).max()
+    np.testing.assert_allclose(pos_pal, pos_ref, rtol=1e-3, atol=1e-3 * scale)
+
+
+def test_layout_dtype_threaded():
+    """FA2Config.dtype drives the position dtype end to end (it used to be
+    declared and ignored)."""
+    edges, w, mass, n = _small_layout_inputs(n=96)
+    for dt in ("float32", "bfloat16"):
+        cfg = fa2.FA2Config(iterations=3, repulsion="exact", use_radii=False,
+                            dtype=dt)
+        pos, trace = fa2.layout(edges, w, mass, n, cfg)
+        assert pos.dtype == jnp.dtype(dt), (dt, pos.dtype)
+        assert trace.dtype == jnp.dtype(dt)
+        assert np.isfinite(np.asarray(pos, np.float32)).all()
+    key = jax.random.PRNGKey(0)
+    assert fa2.init_positions(8, key, dtype="bfloat16").dtype == jnp.bfloat16
+
+
+def test_layout_grid_rebuild_amortized():
+    """grid_rebuild > 1 reuses the carried binning between rebuilds: the
+    layout stays finite and, over a single rebuild period, is identical to
+    the rebuild-every-iteration path (binning only goes stale after the
+    first rebuild interval elapses)."""
+    edges, w, mass, n = _small_layout_inputs(n=180, seed=3)
+    every = fa2.FA2Config(iterations=3, repulsion="grid", grid_size=8,
+                          use_radii=False, grid_rebuild=1, seed=1)
+    pos_1, _ = fa2.layout(edges, w, mass, n, every)
+    # 3 iterations with rebuild cadence 1 vs a cadence longer than the run:
+    # the stale path must diverge (it keeps iteration-0 binning throughout).
+    stale = dataclasses.replace(every, grid_rebuild=50)
+    pos_stale, _ = fa2.layout(edges, w, mass, n, stale)
+    assert np.isfinite(np.asarray(pos_stale)).all()
+    assert not np.allclose(np.asarray(pos_stale), np.asarray(pos_1))
+    # cadence == 1 via the cond path (rebuild every iteration) must agree
+    # with the unconditional path bit-for-bit after one iteration.
+    one_it = dataclasses.replace(every, iterations=1)
+    one_it_stale = dataclasses.replace(stale, iterations=1)
+    p1, _ = fa2.layout(edges, w, mass, n, one_it)
+    p2, _ = fa2.layout(edges, w, mass, n, one_it_stale)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=1e-6, atol=1e-4)
+
+
+def test_attraction_sorted_matches_scatter():
+    """The pre-sorted segment-sum attraction equals the legacy two-scatter
+    form (padded trash slots dropped identically)."""
+    rng = np.random.default_rng(2)
+    n, e = 70, 200
+    edges_np = rng.integers(0, n, (e, 2)).astype(np.int32)
+    edges_np = edges_np[edges_np[:, 0] != edges_np[:, 1]]
+    edges = jnp.asarray(pad_edges(edges_np, e, n))
+    w = jnp.concatenate([
+        jnp.asarray(rng.uniform(0.5, 2.0, len(edges_np)).astype(np.float32)),
+        jnp.ones(e - len(edges_np), jnp.float32),  # weights on trash slots
+    ])
+    pos = jnp.asarray(rng.uniform(-10, 10, (n, 2)).astype(np.float32))
+    legacy = np.asarray(fa2._attraction(pos, edges, w, n))
+    src, dst, w2 = fa2._attraction_edge_layout(edges, w)
+    sorted_ = np.asarray(fa2._attraction_sorted(pos, src, dst, w2, n))
+    np.testing.assert_allclose(sorted_, legacy, rtol=1e-5, atol=1e-4)
 
 
 def test_color_groups_bulk_and_range():

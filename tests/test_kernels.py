@@ -24,6 +24,9 @@ from repro.kernels.raster.ref import (
 )
 from repro.kernels.raster.splat import count_scatter_pallas, disk_accum_pallas
 from repro.kernels.raster import ops as raster_ops
+from repro.kernels.grid import ref as grid_ref
+from repro.kernels.grid.tiled import far_field_pallas, near_field_pallas
+from repro.kernels.grid import ops as grid_ops
 
 INT32_MAX = np.iinfo(np.int32).max
 
@@ -137,6 +140,80 @@ def test_segment_ops_wrapper():
     a = seg_ops.segment_sum(data, seg, 50, backend="ref")
     b = seg_ops.segment_sum(data, seg, 50, backend="interpret")
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_segment_sum_sorted_flag():
+    """The ``indices_are_sorted`` fast path (FA2 attraction / grid stats)
+    matches the unsorted path on sorted ids, incl. out-of-range tails."""
+    rng = np.random.default_rng(13)
+    data = jnp.asarray(rng.standard_normal((512, 3)).astype(np.float32))
+    seg = jnp.asarray(np.sort(rng.integers(0, 80, 512)).astype(np.int32))
+    seg = seg.at[-20:].set(80)  # trash tail sorts last, must be dropped
+    a = seg_ops.segment_sum(data, seg, 80, backend="ref")
+    b = seg_ops.segment_sum(data, seg, 80, backend="ref",
+                            indices_are_sorted=True)
+    c = seg_ops.segment_sum(data, seg, 80, backend="interpret",
+                            indices_are_sorted=True)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ grid fields
+@pytest.mark.parametrize("n,g,ti,tc", [
+    (300, 8, 128, 128),   # C=64 < one cell tile
+    (1000, 16, 256, 128),  # padding on both axes
+    (512, 32, 256, 256),   # n < C
+])
+def test_grid_far_field_kernel_vs_ref(n, g, ti, tc):
+    rng = np.random.default_rng(n + g)
+    pos = jnp.asarray(rng.uniform(-300, 300, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 4.0, n).astype(np.float32))
+    cell, order = grid_ref.bin_and_sort(pos, g)
+    ccent, cmass = grid_ops.cell_stats(pos[order], mass[order], cell[order],
+                                       g * g, backend="ref")
+    want = grid_ref.far_field_ref(pos, mass, cell, ccent, cmass, 80.0)
+    got = far_field_pallas(pos, mass, cell, ccent, cmass, 80.0,
+                           ti=ti, tc=tc, interpret=True)
+    scale = float(np.abs(np.asarray(want)).max())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4 * max(scale, 1.0))
+
+
+@pytest.mark.parametrize("n,g,window,ti", [
+    (300, 8, 16, 128),
+    (700, 4, 64, 128),   # heavy cells, window spilling into neighbor tiles
+    (256, 16, 0, 128),   # empty band
+    (100, 1, 256, 128),  # window > n: ti is raised to cover it
+])
+def test_grid_near_field_kernel_vs_ref(n, g, window, ti):
+    rng = np.random.default_rng(n + window)
+    pos = jnp.asarray(rng.uniform(-300, 300, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 4.0, n).astype(np.float32))
+    cell, order = grid_ref.bin_and_sort(pos, g)
+    pos_s, mass_s, cell_s = pos[order], mass[order], cell[order]
+    want = grid_ref.near_field_ref(pos_s, mass_s, cell_s, 80.0, window)
+    got = near_field_pallas(pos_s, mass_s, cell_s, 80.0, window,
+                            ti=ti, interpret=True)
+    scale = float(np.abs(np.asarray(want)).max())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4 * max(scale, 1.0))
+
+
+def test_grid_ops_padding_neutral():
+    """mass-0 padding must not change grid forces on real nodes."""
+    rng = np.random.default_rng(17)
+    n = 200
+    pos = jnp.asarray(rng.uniform(-50, 50, (n, 2)).astype(np.float32))
+    mass = jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+    cell, order = grid_ref.bin_and_sort(pos, 8)
+    ccent, cmass = grid_ops.cell_stats(pos[order], mass[order], cell[order],
+                                       64, backend="ref")
+    f1 = grid_ref.far_field_ref(pos, mass, cell, ccent, cmass, 80.0)
+    pos_p = jnp.concatenate([pos, jnp.zeros((56, 2), jnp.float32)])
+    mass_p = jnp.concatenate([mass, jnp.zeros(56, jnp.float32)])
+    cell_p = jnp.concatenate([cell, jnp.full(56, -1, jnp.int32)])
+    f2 = grid_ref.far_field_ref(pos_p, mass_p, cell_p, ccent, cmass, 80.0)[:n]
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5)
 
 
 # ---------------------------------------------------- sorted-merge-combine
