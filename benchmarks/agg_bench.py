@@ -126,8 +126,9 @@ def run(quick: bool = False, records: list | None = None):
     )
 
 
-def _check_merge_wins(records: list) -> None:
-    """Acceptance bar: merge beats lexsort wherever cap ≥ 8 × chunk."""
+def _check_merge_wins(records: list) -> list[str]:
+    """Acceptance bar: merge beats lexsort wherever cap ≥ 8 × chunk.
+    Returns the result lines (printed and fed to ``run.step_summary``)."""
     checked = 0
     for r in records:
         if r["backend"] != "speedup" or r["cap_over_chunk"] < 8:
@@ -138,7 +139,7 @@ def _check_merge_wins(records: list) -> None:
             f"cap={r['cap']}: speedup {r['speedup']:.2f}"
         )
     assert checked, "no cap ≥ 8×chunk points in the sweep"
-    print(f"check: merge beats lexsort at all {checked} cap≥8×chunk points")
+    return [f"check: merge beats lexsort at all {checked} cap≥8×chunk points"]
 
 
 def main() -> None:
@@ -181,7 +182,11 @@ def main() -> None:
             }, f, indent=2)
         print(f"wrote {args.json} ({len(records)} records)")
     if args.check:
-        _check_merge_wins(records)
+        from benchmarks.run import step_summary
+
+        lines = _check_merge_wins(records)
+        print("\n".join(lines))
+        step_summary("agg_bench", lines)
 
 
 if __name__ == "__main__":

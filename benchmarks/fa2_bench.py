@@ -157,8 +157,9 @@ def run(quick: bool = False, records: list | None = None):
                 })
 
 
-def _check(records: list) -> None:
-    """Acceptance bars (see module docstring)."""
+def _check(records: list) -> list[str]:
+    """Acceptance bars (see module docstring). Returns the result lines
+    (printed and fed to ``run.step_summary``)."""
     checked_speed = checked_mem = 0
     for r in records:
         if r["backend"] == "speedup" and r["n"] >= SPEEDUP_N:
@@ -180,9 +181,11 @@ def _check(records: list) -> None:
             )
     assert checked_speed, f"no n ≥ {SPEEDUP_N} points in the sweep"
     assert checked_mem, "no tiled far-field records in the sweep"
-    print(f"check: tiled ≥ {SPEEDUP_MIN}x dense at all {checked_speed} "
-          f"n≥{SPEEDUP_N} points; far field O(n + G²) at all "
-          f"{checked_mem} tiled points")
+    return [
+        f"check: tiled ≥ {SPEEDUP_MIN}x dense at all {checked_speed} "
+        f"n≥{SPEEDUP_N} points",
+        f"check: far field O(n + G²) at all {checked_mem} tiled points",
+    ]
 
 
 def main() -> None:
@@ -210,7 +213,11 @@ def main() -> None:
             }, f, indent=2)
         print(f"wrote {args.json} ({len(records)} records)")
     if args.check:
-        _check(records)
+        from benchmarks.run import step_summary
+
+        lines = _check(records)
+        print("\n".join(lines))
+        step_summary("fa2_bench", lines)
 
 
 if __name__ == "__main__":

@@ -129,9 +129,10 @@ def run(quick: bool = False, records: list | None = None,
             })
 
 
-def _check(records: list) -> None:
+def _check(records: list) -> list[str]:
     """Acceptance bar: ≥ 1M edges/s at the check point; peak device bytes
-    bit-equal across the |E| / 4·|E| residency runs."""
+    bit-equal across the |E| / 4·|E| residency runs. Returns the result
+    lines (printed and fed to ``run.step_summary``)."""
     pts = [r for r in records if r["kind"] == "edges"
            and r["res"] == CHECK_CFG["width"]
            and r["samples"] == CHECK_CFG["edge_samples"]]
@@ -146,10 +147,10 @@ def _check(records: list) -> None:
     assert peaks["E"] == peaks["4E"], (
         f"render residency grew with |E|: {peaks['E']:,} → {peaks['4E']:,}"
     )
-    print(
-        f"check: edge splat {best / 1e6:.2f}M edges/s ≥ 1M; "
-        f"peak device bytes |E|-independent ({peaks['E']:,})"
-    )
+    return [
+        f"check: edge splat {best / 1e6:.2f}M edges/s ≥ 1M",
+        f"check: peak device bytes |E|-independent ({peaks['E']:,})",
+    ]
 
 
 def main() -> None:
@@ -185,7 +186,11 @@ def main() -> None:
             }, f, indent=2)
         print(f"wrote {args.json} ({len(records)} records)")
     if args.check:
-        _check(records)
+        from benchmarks.run import step_summary
+
+        lines = _check(records)
+        print("\n".join(lines))
+        step_summary("render_bench", lines)
 
 
 if __name__ == "__main__":

@@ -8,8 +8,25 @@ bench's one-line description.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+
+def step_summary(bench: str, lines: list[str]) -> None:
+    """Append a bench's ``--check`` result lines to the GitHub Actions job
+    summary ($GITHUB_STEP_SUMMARY, a markdown file the runner renders under
+    the job). No-op outside CI (env var unset) or with nothing to report —
+    benches call this unconditionally after their checks pass.
+    """
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path or not lines:
+        return
+    with open(path, "a") as f:
+        f.write(f"### {bench}\n\n")
+        for line in lines:
+            f.write(f"- {line}\n")
+        f.write("\n")
 
 
 def main() -> None:
@@ -22,7 +39,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (agg_bench, fa2_bench, fig_params, kernels_bench,
-                            render_bench, roofline, stream_bench,
+                            render_bench, roofline, shard_bench, stream_bench,
                             table1_speedup, table2_hashes, table3_rounds)
 
     modules = {
@@ -35,6 +52,7 @@ def main() -> None:
         "agg": agg_bench,
         "render": render_bench,
         "fa2": fa2_bench,
+        "shard": shard_bench,
         "roofline": roofline,
     }
     if args.list:

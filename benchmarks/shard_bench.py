@@ -1,0 +1,255 @@
+"""Device-count weak-scaling sweep for the sharded detect+layout pipeline:
+each point re-runs the full streamed pipeline in a subprocess forced to D
+CPU devices (``--xla_force_host_platform_device_count``), and the parent
+asserts the D-device labels / supergraph / layout are bit-for-bit identical
+to the 1-device run while per-device peak bytes shrink ~1/D.
+
+    PYTHONPATH=src python -m benchmarks.shard_bench --quick
+    PYTHONPATH=src python -m benchmarks.shard_bench --devices 1,8 --check \
+        --json shard.json
+    PYTHONPATH=src python -m benchmarks.run --only shard
+
+CSV rows (name,us_per_call,derived) per the harness contract. The worker
+(``--worker``) prints one JSON blob and nothing else; it is always spawned
+with its own ``XLA_FLAGS``/``JAX_PLATFORMS=cpu`` so the sweep is
+independent of the parent's device count. Hashes cover every pipeline
+output (labels, supergraph edges/weights/sizes, layout positions), so a
+single reordered float add anywhere in the sharded path fails the sweep.
+``peak_local_bytes`` is the engine's per-device analytic (replicated state
++ chunk/D — core/stream.py); the worker also measures the real placement
+of one sharded chunk via ``addressable_shards`` as a cross-check.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import row
+
+# Sweep shapes: the chunk buffers must dominate replicated per-pass state
+# for the 1/D memory assertion to have teeth (state is replicated on every
+# device; only chunk buffers shard). block 4096 divides the chunk and any
+# power-of-two device count, so no divisibility fallback triggers.
+# ``max_super`` caps the aggregation state (the default min(4|E|, 262144)
+# is 3 MB of replicated pa/pb/pw — it would swamp the sharded chunks); the
+# planted graphs here have < 2k distinct community pairs, far below it.
+FULL = dict(nodes=6144, communities=48, p_in=0.5, p_out=0.012,
+            chunk=131072, block=4096, rounds=2, iterations=10,
+            max_super=16384)
+QUICK = dict(nodes=2048, communities=32, p_in=0.5, p_out=0.03,
+             chunk=32768, block=2048, rounds=2, iterations=5,
+             max_super=8192)
+SEED = 7
+DEVICES_FULL = (1, 2, 4, 8)
+DEVICES_QUICK = (1, 2)
+# Memory bar: local_D <= total_1 * (1/D + EPS). EPS absorbs the replicated
+# state share of the footprint; the shapes above keep it chunk-dominated.
+MEM_EPS = 0.25
+
+
+def _hash(a) -> str:
+    import numpy as np
+
+    return hashlib.sha256(np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()
+
+
+def _worker(args) -> None:
+    """Run the sharded streamed pipeline on every local device; print JSON."""
+    import time
+    from dataclasses import replace
+
+    import jax
+    import numpy as np
+
+    from repro.core.pipeline import default_config
+    from repro.core.stream import StreamConfig
+    from repro.graph import mode_degree, planted_partition
+    from repro.launch.mesh import make_stream_mesh
+    from repro.launch.stream_runner import StreamRunner, StreamRunnerConfig
+
+    p = QUICK if args.quick else FULL
+    n = p["nodes"]
+    edges, _ = planted_partition(n, p["communities"], p["p_in"], p["p_out"],
+                                 seed=SEED)
+    delta = mode_degree(edges, n)
+    cfg = default_config(n, len(edges), delta, rounds=p["rounds"],
+                         iterations=p["iterations"])
+    cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=p["block"]),
+                  max_super_edges=p["max_super"])
+    mesh = make_stream_mesh()
+    runner = StreamRunner(cfg, StreamRunnerConfig(
+        stream=StreamConfig(chunk_size=p["chunk"], prefetch=1,
+                            shard_detect=True, shard_layout=True),
+        shard_chunks=True,
+    ), mesh=mesh)
+
+    t0 = time.perf_counter()
+    res = runner.run(edges, n)
+    wall_s = time.perf_counter() - t0
+
+    # Real placement cross-check: one row-sharded chunk's largest per-device
+    # shard (the analytic peak assumes exactly chunk/D bytes per device).
+    arr = runner.put(np.ascontiguousarray(edges[: p["chunk"]]))
+    shard_b = max(s.data.nbytes for s in arr.addressable_shards)
+
+    s = res.stream
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "stats_devices": s.devices,
+        "n_edges": int(len(edges)),
+        "wall_s": wall_s,
+        "edges_per_s": s.edges_per_s,
+        "passes": s.passes,
+        "chunks": s.chunks,
+        "peak_device_bytes": s.peak_device_bytes,
+        "peak_local_bytes": s.peak_local_bytes,
+        "chunk_shard_bytes": shard_b,
+        "chunk_full_bytes": int(p["chunk"] * 8),
+        "n_supernodes": res.n_supernodes,
+        "n_superedges": res.n_superedges,
+        "modularity": res.modularity,
+        "hash_labels": _hash(res.labels),
+        "hash_sg_edges": _hash(res.supergraph.edges),
+        "hash_sg_weights": _hash(res.supergraph.weights),
+        "hash_sizes": _hash(res.sizes),
+        "hash_positions": _hash(res.positions),
+    }))
+
+
+def _spawn(devices: int, quick: bool) -> dict:
+    """One sweep point: this module as a worker under a forced device count."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    # Drop any inherited device-count forcing so ours is the only one.
+    kept = [tok for tok in env.get("XLA_FLAGS", "").split()
+            if not tok.startswith("--xla_force_host_platform_device_count")]
+    kept.append(f"--xla_force_host_platform_device_count={devices}")
+    env["XLA_FLAGS"] = " ".join(kept)
+    cmd = [sys.executable, "-m", "benchmarks.shard_bench", "--worker"]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"shard worker (D={devices}) failed:\n{out.stdout}\n{out.stderr}"
+        )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+HASH_KEYS = ("hash_labels", "hash_sg_edges", "hash_sg_weights", "hash_sizes",
+             "hash_positions", "n_supernodes", "n_superedges", "modularity")
+
+
+def run(quick: bool = False, devices: tuple | None = None,
+        records: list | None = None):
+    """Yield CSV rows; append one structured record per device count."""
+    devs = devices or (DEVICES_QUICK if quick else DEVICES_FULL)
+    base = None
+    for d in devs:
+        r = _spawn(d, quick)
+        r["match_base"] = (
+            base is None or all(r[k] == base[k] for k in HASH_KEYS)
+        )
+        if base is None:
+            base = r
+        ratio = r["peak_local_bytes"] / base["peak_device_bytes"]
+        r["local_over_base"] = ratio
+        yield row(
+            f"shard/pipeline/D{d}", r["wall_s"],
+            f"devices={r['stats_devices']};match={int(r['match_base'])};"
+            f"edges_per_s={r['edges_per_s']:.3e};"
+            f"peak_local={r['peak_local_bytes']};local_over_1dev={ratio:.3f}",
+        )
+        if records is not None:
+            records.append(r)
+
+
+def _check(records: list) -> list[str]:
+    """Acceptance bars: every D bit-identical to D=1; sharding engaged (no
+    silent divisibility fallback); per-device peak <= (1/D + eps) of the
+    1-device peak; real chunk shards exactly chunk/D bytes. Returns the
+    result lines (printed and fed to ``run.step_summary``)."""
+    base = records[0]
+    assert base["devices"] == 1, f"first sweep point has D={base['devices']}"
+    for r in records:
+        d = r["devices"]
+        assert r["match_base"], (
+            f"D={d} diverged from D=1: "
+            + str({k: (r[k], base[k]) for k in HASH_KEYS if r[k] != base[k]})
+        )
+        assert r["stats_devices"] == d, (
+            f"D={d} run fell back to {r['stats_devices']} device(s) — "
+            "a divisibility gate silently disabled sharding"
+        )
+        assert r["chunk_shard_bytes"] * d == r["chunk_full_bytes"], (
+            f"D={d}: chunk shard {r['chunk_shard_bytes']}B x {d} != "
+            f"{r['chunk_full_bytes']}B — chunk not evenly row-sharded"
+        )
+        bound = (1.0 / d + MEM_EPS) * base["peak_device_bytes"]
+        assert r["peak_local_bytes"] <= bound, (
+            f"D={d}: per-device peak {r['peak_local_bytes']:,}B > "
+            f"(1/{d} + {MEM_EPS}) x 1-device peak "
+            f"{base['peak_device_bytes']:,}B"
+        )
+    dmax = records[-1]
+    return [
+        f"check: {len(records)} device counts "
+        f"({', '.join(str(r['devices']) for r in records)}) all bit-identical "
+        "to 1 device (labels, supergraph, layout)",
+        f"check: per-device peak at D={dmax['devices']} is "
+        f"{dmax['local_over_base']:.2f}x the 1-device peak "
+        f"(bound 1/D + {MEM_EPS})",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller graph, device counts 1,2")
+    ap.add_argument("--devices", default="",
+                    help="comma-separated device counts (default 1,2,4,8; "
+                         "quick 1,2)")
+    ap.add_argument("--json", default="",
+                    help="also write structured records to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="assert bit-identity across device counts and the "
+                         "1/D per-device memory bar")
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    if args.worker:
+        _worker(args)
+        return
+
+    devices = None
+    if args.devices:
+        # dict.fromkeys: dedupe while keeping order (e.g. "1,2,2" → 1,2)
+        devices = tuple(dict.fromkeys(int(d) for d in args.devices.split(",")))
+        assert devices[0] == 1, "sweep must start at 1 device (the reference)"
+    records: list = []
+    print("name,us_per_call,derived")
+    for line in run(quick=args.quick, devices=devices, records=records):
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "bench": "shard_bench",
+                "params": QUICK if args.quick else FULL,
+                "mem_eps": MEM_EPS,
+                "records": records,
+            }, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        from benchmarks.run import step_summary
+
+        lines = _check(records)
+        print("\n".join(lines))
+        step_summary("shard_bench", lines)
+
+
+if __name__ == "__main__":
+    main()

@@ -148,14 +148,37 @@ def run(quick: bool = False, sources: tuple = ("memory", "mmap"),
         )
 
 
-def _check_host_bytes_flat(records: list) -> None:
-    """mmap host residency must not grow with |E| across suite graphs."""
+def _check_host_bytes_flat(records: list) -> list[str]:
+    """mmap host residency must not grow with |E| across suite graphs.
+    Returns the result lines (printed and fed to ``run.step_summary``)."""
     by_pf = {}
     for r in records:
         if r["source"] == "mmap":
             by_pf.setdefault(r["prefetch"], set()).add(r["peak_host_bytes"])
     for pf, vals in by_pf.items():
         assert len(vals) == 1, f"mmap peak_host_bytes varies with |E|: {vals}"
+    return [
+        f"check: mmap peak_host_bytes |E|-independent at prefetch={pf} "
+        f"({next(iter(vals)):,} bytes)"
+        for pf, vals in sorted(by_pf.items())
+    ]
+
+
+def _check(records: list, sources: tuple) -> list[str]:
+    """Streamed-run acceptance summary. The hard bit-identity and residency
+    assertions already ran inline in ``bench_graph`` (every streamed run is
+    compared to its one-shot reference as it happens); this recaps them for
+    the CI step summary and re-asserts the cross-graph mmap invariant."""
+    streamed = [r for r in records if r["source"] in ("memory", "mmap")]
+    assert streamed, "no streamed records in the sweep"
+    lines = [
+        f"check: all {len(streamed)} streamed runs bit-identical to "
+        "one-shot, peak device bytes below one-shot residency"
+    ]
+    mmap_graphs = {r["graph"] for r in streamed if r["source"] == "mmap"}
+    if "mmap" in sources and len(mmap_graphs) > 1:
+        lines += _check_host_bytes_flat(records)
+    return lines
 
 
 def main() -> None:
@@ -169,6 +192,10 @@ def main() -> None:
                     help="bench a converted edge file instead of the suite")
     ap.add_argument("--nodes", type=int, default=0,
                     help="node count of --edges (required with it)")
+    ap.add_argument("--check", action="store_true",
+                    help="summarize the inline streamed==one-shot and "
+                         "residency assertions (and re-assert mmap host "
+                         "bytes flat across graphs when applicable)")
     args = ap.parse_args()
 
     sources = ("memory", "mmap") if args.source == "both" else (args.source,)
@@ -200,6 +227,12 @@ def main() -> None:
                 "records": records,
             }, f, indent=2)
         print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        from benchmarks.run import step_summary
+
+        lines = _check(records, sources)
+        print("\n".join(lines))
+        step_summary("stream_bench", lines)
 
 
 if __name__ == "__main__":

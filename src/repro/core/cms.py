@@ -72,6 +72,34 @@ def merge(*sketches: jnp.ndarray) -> jnp.ndarray:
     return functools.reduce(jnp.add, sketches)
 
 
+@functools.lru_cache(maxsize=None)
+def sharded_update(mesh, cfg: CMSConfig):
+    """Compiled sharded ``update`` over ``mesh``: keys/weights arrive
+    row-sharded (all mesh axes on dim 0), the sketch replicated; each device
+    sketches its own key slice and one ``psum`` merges — the linearity the
+    module docstring promises. Exact vs. single-device while the counts stay
+    integer-valued below 2^24 (community sizes are degree sums, i.e. ints).
+    Requires ``len(keys) % mesh.size == 0`` — callers pad with key=-1 (the
+    masked padding slot) to the next multiple.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.compat import shard_map_compat
+    from repro.sharding.rules import row_chunk_spec
+
+    axes = tuple(mesh.axis_names)
+    row1d = P(row_chunk_spec(mesh)[0])  # 1-D operands: drop the trailing None
+
+    def body(sketch, keys, weights):
+        local = update(jnp.zeros_like(sketch), keys, weights, cfg)
+        return sketch + jax.lax.psum(local, axes)
+
+    mapped = shard_map_compat(
+        body, mesh, in_specs=(P(), row1d, row1d), out_specs=P()
+    )
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
 # --------------------------------------------------------------------------
 # Chunk-incremental API (core/stream.py engine). The sketch is linear, so
 # ``update`` already *is* the chunk step: init → update×chunks → finalize.

@@ -297,3 +297,168 @@ def layout(
 
     state, trace = jax.lax.scan(body, state, jnp.arange(cfg.iterations))
     return state[0], trace
+
+
+# --------------------------------------------------------------------------
+# Node-partitioned multi-device layout (ROADMAP item 1, Arleo et al. in
+# PAPERS.md): each device owns n/D consecutive nodes and computes only their
+# forces; one tiled all_gather per iteration reassembles the force array for
+# the (replicated) speed controller. Per-force-term placement:
+#
+#   gravity     — elementwise on the owned rows.
+#   attraction  — full-size sorted segment-sum with non-owned sources
+#                 weight-masked, owned rows sliced: owned segments receive
+#                 exactly the single-device terms in the same order.
+#   exact rep.  — n ≤ 2048: replicated dense ref, rows sliced (the CPU auto
+#                 dispatch); n > 2048: ``repulsion_chunked_rows`` — the
+#                 j-chunk scan math on the owned rows only (rows are
+#                 independent, so bitwise equal at 1/D the work+memory).
+#   grid rep.   — bin/sort/monopole stats replicated (O(n + G²)); far field
+#                 row-sliced through ``far_field_ref`` (per-node cell sums);
+#                 near field via the psum-free ``near_field_rows`` halo;
+#                 sorted rows gathered, then the unsort scatter replicated.
+#
+# Every cross-device step is a concatenation (all_gather) — never a float
+# reduction — so D-device layouts are bit-identical to the single-device
+# CPU dispatch ("exact"/"grid" backends; tests/test_sharded_pipeline.py).
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.compat import shard_map_compat
+    from repro.sharding.rules import linear_axis_index
+
+    axes = tuple(mesh.axis_names)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    nl = n // mesh.size
+    dtype = jnp.dtype(cfg.dtype)
+    grid_state = cfg.repulsion == "grid"
+    carry_grid = grid_state and cfg.grid_rebuild > 1
+    kr = cfg.repulsion_k
+
+    def sharded_body(pos0, mass, radii, src, dst, w2):
+        i0 = nl * linear_axis_index(axes, sizes)
+
+        def rows(x):
+            return jax.lax.dynamic_slice_in_dim(x, i0, nl)
+
+        state = (pos0, jnp.zeros_like(pos0), jnp.asarray(1.0, dtype))
+        if carry_grid:
+            z = jnp.zeros(n, jnp.int32)
+            state = state + (z, z)
+
+        def body(state, it):
+            if carry_grid:
+                pos, prev_f, gs, cell, order = state
+                cell, order = jax.lax.cond(
+                    it % cfg.grid_rebuild == 0,
+                    lambda: grid_ops.bin_and_sort(pos, cfg.grid_size),
+                    lambda: (cell, order),
+                )
+                core = (pos, prev_f, gs)
+            else:
+                core = state
+                pos = core[0]
+                if grid_state:
+                    cell, order = grid_ops.bin_and_sort(pos, cfg.grid_size)
+
+            f_r = _gravity(rows(pos), rows(mass), cfg)
+
+            pos_ext = jnp.concatenate([pos, jnp.zeros((1, 2), pos.dtype)])
+            own = (src >= i0) & (src < i0 + nl)
+            fe = jnp.where(own, w2, 0.0)[:, None] * (pos_ext[dst] - pos_ext[src])
+            att = segment_ops.segment_sum(
+                fe, src, n, backend="ref", indices_are_sorted=True
+            )
+            f_r = f_r + rows(att)
+
+            if grid_state:
+                pos32 = pos.astype(jnp.float32)
+                mass32 = mass.astype(jnp.float32)
+                pos_s, mass_s, cell_s = pos32[order], mass32[order], cell[order]
+                ccent, cmass = grid_ops.cell_stats(
+                    pos_s, mass_s, cell_s, cfg.grid_size * cfg.grid_size,
+                    backend="ref",
+                )
+                force_sr = grid_ops.far_field_ref(
+                    rows(pos_s), rows(mass_s), rows(cell_s), ccent, cmass, kr
+                )
+                force_sr = force_sr + grid_ops.near_field_rows(
+                    pos_s, mass_s, cell_s, kr, cfg.grid_window, i0, nl
+                )
+                force_s = jax.lax.all_gather(force_sr, axes, axis=0, tiled=True)
+                rep = jnp.zeros_like(force_s).at[order].set(force_s)
+                f_r = f_r + rows(rep.astype(pos.dtype))
+            else:
+                r = radii if cfg.use_radii else None
+                if n <= 2048:
+                    f_r = f_r + rows(
+                        repulsion_ops.repulsion(pos, mass, kr, radii=r,
+                                                backend="ref")
+                    )
+                else:
+                    f_r = f_r + repulsion_ops.repulsion_chunked_rows(
+                        pos, mass, i0, nl, kr, radii=r,
+                        use_radii=cfg.use_radii,
+                    )
+
+            f = jax.lax.all_gather(f_r, axes, axis=0, tiled=True)
+            core, fmag = _apply_speed(core, f, mass, cfg)
+            if carry_grid:
+                return core + (cell, order), jnp.max(fmag)
+            return core, jnp.max(fmag)
+
+        state, trace = jax.lax.scan(body, state, jnp.arange(cfg.iterations))
+        return state[0], trace
+
+    mapped = shard_map_compat(
+        sharded_body,
+        mesh,
+        in_specs=(P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+    )
+
+    def run(edges, weights, mass, pos0):
+        weights = weights.astype(dtype)
+        mass = mass.astype(dtype)
+        radii = jnp.sqrt(jnp.maximum(mass, 0.0))
+        src, dst, w2 = _attraction_edge_layout(edges, weights)
+        return mapped(pos0, mass, radii, src, dst, w2)
+
+    return jax.jit(run)
+
+
+def layout_sharded(
+    edges: jnp.ndarray,
+    weights: jnp.ndarray,
+    mass: jnp.ndarray,
+    n: int,
+    cfg: FA2Config,
+    mesh,
+    pos0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``layout`` with the force pass node-partitioned over ``mesh``.
+
+    Falls back to ``layout`` when the mesh is trivial, ``n`` doesn't divide
+    by the device count, or the backend has no sharded form ("grid_pallas",
+    "grid_dense"). Bit-identical to the single-device *CPU* dispatch of
+    "exact"/"grid" (on TPU, ``layout``'s auto-dispatch picks Pallas kernels
+    this path does not mirror).
+    """
+    if (
+        mesh is None
+        or mesh.size <= 1
+        or n % mesh.size != 0
+        or cfg.repulsion in ("grid_pallas", "grid_dense")
+    ):
+        return layout(edges, weights, mass, n, cfg, pos0)
+    dtype = jnp.dtype(cfg.dtype)
+    pos = (
+        init_positions(n, jax.random.PRNGKey(cfg.seed), dtype=cfg.dtype)
+        if pos0 is None
+        else pos0.astype(dtype)
+    )
+    return _sharded_layout_fn(mesh, cfg, n)(edges, weights, mass, pos)

@@ -46,6 +46,38 @@ def _modularity_update_body(state, chunk, labels_ext):
 modularity_update = jax.jit(_modularity_update_body, donate_argnums=(0,))
 
 
+@functools.lru_cache(maxsize=None)
+def sharded_modularity_update(mesh):
+    """Compiled sharded ``modularity_update`` over ``mesh``: the chunk is
+    row-sharded, labels/state replicated, and the three accumulators merge
+    by one ``psum`` — exact, since every scatter adds 1.0 (integer-valued
+    float32 sums). Requires ``chunk_len % mesh.size == 0``."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.compat import shard_map_compat
+    from repro.sharding.rules import row_chunk_spec
+
+    axes = tuple(mesh.axis_names)
+
+    def body(state, chunk, labels_ext):
+        zero = (
+            jnp.zeros_like(state[0]),
+            jnp.zeros_like(state[1]),
+            jnp.zeros_like(state[2]),
+        )
+        inc = _modularity_update_body(zero, chunk, labels_ext)
+        inc = jax.lax.psum(inc, axes)
+        return tuple(s + d for s, d in zip(state, inc))
+
+    mapped = shard_map_compat(
+        body,
+        mesh,
+        in_specs=((P(), P(), P()), row_chunk_spec(mesh), P()),
+        out_specs=(P(), P(), P()),
+    )
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
 def _modularity_finalize_body(state):
     m, intra, dcom = state
     return jnp.sum(intra[:-1] / m - (dcom[:-1] / (2.0 * m)) ** 2)

@@ -96,13 +96,20 @@ def _block(fn, *args):
     return out
 
 
-def layout_supergraph(sg: Supergraph, cfg: BGVConfig) -> jnp.ndarray:
+def layout_supergraph(
+    sg: Supergraph, cfg: BGVConfig, mesh=None, shard_layout: bool = False
+) -> jnp.ndarray:
     """ForceAtlas2 on the (small, device-resident) supergraph → [s_cap, 2].
 
     The layout stage is sized to the LIVE supernode count (padded to a
     power of two for shape reuse): laying out the full s_cap padding
     would erase the paper's headline speedup — the whole point is that
     the supergraph is orders of magnitude smaller than the graph.
+
+    With ``mesh`` + ``shard_layout`` the force pass is node-partitioned
+    over the mesh (``fa2.layout_sharded`` — bit-identical, with its own
+    fallbacks). ``s_layout`` is a power of two ≥ 64, so it divides by any
+    power-of-two device count.
     """
     s_live = max(int(sg.n_supernodes), 2)
     s_layout = 1 << (s_live - 1).bit_length()
@@ -114,10 +121,13 @@ def layout_supergraph(sg: Supergraph, cfg: BGVConfig) -> jnp.ndarray:
     )
     mass = jnp.where(jnp.arange(s_layout) < sg.n_supernodes, mass, 0.0)
     sedges = jnp.minimum(sg.edges[:e_layout], s_layout)  # trash → s_layout
-    pos_live, _trace = _block(
-        lambda e, w, m: fa2.layout(e, w, m, s_layout, cfg.layout),
-        sedges, sg.weights[:e_layout], mass,
-    )
+    if mesh is not None and shard_layout:
+        def run(e, w, m):
+            return fa2.layout_sharded(e, w, m, s_layout, cfg.layout, mesh)
+    else:
+        def run(e, w, m):
+            return fa2.layout(e, w, m, s_layout, cfg.layout)
+    pos_live, _trace = _block(run, sedges, sg.weights[:e_layout], mass)
     return jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
 
 
@@ -160,7 +170,11 @@ def biggraphvis(
     }
 
     t0 = time.perf_counter()
-    pos = layout_supergraph(sg, cfg)
+    pos = layout_supergraph(
+        sg, cfg,
+        mesh=stream.mesh if stream is not None else None,
+        shard_layout=stream.shard_layout if stream is not None else False,
+    )
     t["layout_s"] = time.perf_counter() - t0
 
     groups = color_groups(sg.sizes)

@@ -103,8 +103,16 @@ def _cumcount_endpoints(u, v, valid):
 
 
 def _block_update(state, block, *, threshold, tie_break, degree_update,
-                  exact_block_degrees, conflict, propagate_jumps):
-    """Process one block of edges against the block-start snapshot."""
+                  exact_block_degrees, conflict, propagate_jumps,
+                  mesh_axes=None, mesh_sizes=None):
+    """Process one block of edges against the block-start snapshot.
+
+    With ``mesh_axes`` set the body runs inside a ``shard_map``: ``block``
+    is this device's slice of the block (``block_chunk_spec`` placement),
+    state stays replicated, and every scatter reduction is completed by the
+    matching integer all-reduce (min/max/sum are order-free, so the result
+    is bitwise identical to the single-device block update).
+    """
     com, deg = state
     u, v = block[:, 0], block[:, 1]
     trash = com.shape[0] - 1  # index n_nodes = trash slot
@@ -115,7 +123,22 @@ def _block_update(state, block, *, threshold, tie_break, degree_update,
         # join test sees the post-increment values. Under block-parallel
         # streaming the snapshot approximates this (DESIGN.md §2).
         if exact_block_degrees:
-            cu, cv = _cumcount_endpoints(u, v, valid)
+            if mesh_axes is None:
+                cu, cv = _cumcount_endpoints(u, v, valid)
+            else:
+                # The cumulative occurrence count is a prefix over the FULL
+                # block in stream order — gather the block (tiled order ==
+                # the row order of the sharding) and slice back our rows.
+                from repro.sharding.rules import linear_axis_index
+
+                bsl = u.shape[0]
+                full = jax.lax.all_gather(block, mesh_axes, axis=0, tiled=True)
+                uf, vf = full[:, 0], full[:, 1]
+                validf = (uf != trash) & (vf != trash) & (uf != vf)
+                cuf, cvf = _cumcount_endpoints(uf, vf, validf)
+                i0 = bsl * linear_axis_index(mesh_axes, mesh_sizes)
+                cu = jax.lax.dynamic_slice_in_dim(cuf, i0, bsl)
+                cv = jax.lax.dynamic_slice_in_dim(cvf, i0, bsl)
         else:
             cu = cv = 0
         du = deg[u] + 1 + cu
@@ -142,20 +165,33 @@ def _block_update(state, block, *, threshold, tie_break, degree_update,
         # 1) winning donor degree per adoptee, 2) min com among winners.
         donor_deg = jnp.where(any_adopt, jnp.where(adopt_v, du, dv), -1)
         win_deg = jnp.full_like(com, -1).at[adoptee].max(donor_deg)
+        if mesh_axes is not None:  # winners are decided across ALL shards
+            win_deg = jax.lax.pmax(win_deg, mesh_axes)
         is_winner = any_adopt & (donor_deg == win_deg[adoptee])
         cand_val = jnp.where(is_winner, donor_com, INT32_MAX)
         cand = jnp.full_like(com, INT32_MAX).at[adoptee].min(cand_val)
     else:  # "min": smallest donor community id wins
         cand = jnp.full_like(com, INT32_MAX).at[adoptee].min(donor_com)
+    if mesh_axes is not None:
+        cand = jax.lax.pmin(cand, mesh_axes)
     new_com = jnp.where(cand != INT32_MAX, cand, com)
     new_com = new_com.at[trash].set(trash)
     for _ in range(propagate_jumps):  # collapse intra-block adoption chains
         new_com = new_com[new_com]
 
     if degree_update == "paper":
-        new_deg = deg.at[adoptee].add(jnp.where(any_adopt, 1, 0))
+        if mesh_axes is None:
+            new_deg = deg.at[adoptee].add(jnp.where(any_adopt, 1, 0))
+        else:
+            inc = jnp.zeros_like(deg).at[adoptee].add(jnp.where(any_adopt, 1, 0))
+            new_deg = deg + jax.lax.psum(inc, mesh_axes)
     else:  # original SCoDA: both endpoints bump on every processed edge
-        new_deg = deg.at[u].add(jnp.where(valid, 1, 0)).at[v].add(jnp.where(valid, 1, 0))
+        if mesh_axes is None:
+            new_deg = deg.at[u].add(jnp.where(valid, 1, 0)).at[v].add(jnp.where(valid, 1, 0))
+        else:
+            ones = jnp.where(valid, 1, 0)
+            inc = jnp.zeros_like(deg).at[u].add(ones).at[v].add(ones)
+            new_deg = deg + jax.lax.psum(inc, mesh_axes)
     new_deg = new_deg.at[trash].set(0)
     return (new_com, new_deg), None
 
@@ -208,6 +244,50 @@ def _scoda_update_body(state, chunk, threshold, cfg: ScodaConfig):
 # donated — the engine holds exactly one (com, deg) copy on device.
 scoda_update = functools.partial(jax.jit, static_argnames=("cfg",),
                                  donate_argnums=(0,))(_scoda_update_body)
+
+
+@functools.lru_cache(maxsize=None)
+def sharded_scoda_update(mesh, cfg: ScodaConfig):
+    """Compiled sharded chunk update over ``mesh``.
+
+    Takes (state, blocks [n_blocks, block_size, 2], threshold): blocks must
+    arrive sharded per ``block_chunk_spec`` (every device owns the same
+    within-block slice of every block), state/threshold replicated; returns
+    the replicated updated state. Bit-identical to ``scoda_update`` on the
+    equivalent flat chunk: the block scan runs in lockstep across devices
+    and every cross-device reduction is an integer min/max/sum (order-free).
+    Requires ``block_size % mesh.size == 0`` — callers gate on that.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.compat import shard_map_compat
+    from repro.sharding.rules import block_chunk_spec
+
+    axes = tuple(mesh.axis_names)
+    sizes = tuple(mesh.shape[a] for a in axes)
+
+    def body(state, blocks, threshold):
+        step = functools.partial(
+            _block_update,
+            threshold=threshold,
+            tie_break=cfg.tie_break,
+            degree_update=cfg.degree_update,
+            exact_block_degrees=cfg.exact_block_degrees,
+            conflict=cfg.conflict,
+            propagate_jumps=cfg.propagate_jumps,
+            mesh_axes=axes,
+            mesh_sizes=sizes,
+        )
+        state, _ = jax.lax.scan(step, state, blocks)
+        return state
+
+    mapped = shard_map_compat(
+        body,
+        mesh,
+        in_specs=((P(), P()), block_chunk_spec(mesh), P()),
+        out_specs=(P(), P()),
+    )
+    return jax.jit(mapped, donate_argnums=(0,))
 
 
 def _scoda_finalize_body(state, n_nodes: int, cfg: ScodaConfig):

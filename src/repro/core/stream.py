@@ -48,7 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cms as cms_lib
-from repro.core.modularity import modularity_finalize, modularity_init, modularity_update
+from repro.core.modularity import (
+    modularity_finalize,
+    modularity_init,
+    modularity_update,
+    sharded_modularity_update,
+)
 from repro.core.scoda import (
     ScodaConfig,
     dense_labels,
@@ -56,6 +61,7 @@ from repro.core.scoda import (
     scoda_finalize,
     scoda_init,
     scoda_update,
+    sharded_scoda_update,
 )
 from repro.core.supergraph import (
     Supergraph,
@@ -63,9 +69,10 @@ from repro.core.supergraph import (
     agg_init,
     agg_update,
     community_sizes,
+    sharded_agg_update,
 )
 from repro.data.edge_store import EDGE_DTYPE, InMemoryEdgeStore, as_edge_store
-from repro.kernels.compat import device_put_copied
+from repro.kernels.compat import device_put_copied, shard_map_compat
 
 
 @dataclass(frozen=True)
@@ -77,12 +84,25 @@ class StreamConfig:
     baseline; bit-identical below capacity — core/supergraph.py).
     ``time_agg`` blocks on every aggregation update to fill the per-chunk
     ``StreamStats`` aggregation timing (costs copy/compute overlap; leave
-    off outside benchmarks)."""
+    off outside benchmarks).
+
+    Multi-device (DESIGN.md §2, ROADMAP item 1): ``mesh`` + ``shard_detect``
+    lower every per-chunk edge pass (SCoDA labels, degrees, superedge
+    aggregation, modularity, CMS sizing) onto the mesh via ``shard_map`` —
+    chunk buffers are device-sharded, node/sketch/agg state replicated,
+    results bit-identical to single-device. ``shard_layout`` asks the
+    downstream FA2 layout (core/pipeline.py) to node-partition its force
+    pass on the same mesh. Both degrade to the unsharded path when a shape
+    doesn't divide by the device count (see ``stream_detect`` /
+    ``stream_supergraph`` gates)."""
 
     chunk_size: int = 1 << 16  # edges resident on device per chunk
     prefetch: int = 1  # host→device copies dispatched ahead of compute
     agg_backend: str = "merge"  # superedge aggregation: "merge" | "lexsort"
     time_agg: bool = False  # per-chunk aggregation timing in StreamStats
+    mesh: object = None  # jax.sharding.Mesh for the sharded paths (or None)
+    shard_detect: bool = False  # shard the per-chunk edge passes over mesh
+    shard_layout: bool = False  # node-partition the FA2 layout over mesh
 
 
 @dataclass
@@ -100,14 +120,23 @@ class StreamStats:
     compares them across ``agg_backend`` values). ``raster_update_s`` /
     ``raster_chunks`` are their per-chunk analogue for the renderer's
     streamed edge-splat pass (repro/render/raster.py, populated under
-    ``RenderConfig.time_raster``; benchmarks/render_bench.py)."""
+    ``RenderConfig.time_raster``; benchmarks/render_bench.py).
+
+    ``devices`` is the mesh size the sharded passes actually ran on (1 =
+    unsharded); ``peak_local_bytes`` is the analytic *per-device* resident
+    footprint — replicated state at full size plus this device's 1/D slice
+    of the chunk buffers. With ``devices == 1`` it equals
+    ``peak_device_bytes``; benchmarks/shard_bench.py asserts it shrinks
+    toward 1/D of the single-device peak as the chunk term dominates."""
 
     passes: int = 0
     chunks: int = 0
     edges_streamed: int = 0
     seconds: float = 0.0
     chunk_size: int = 0
+    devices: int = 1
     peak_device_bytes: int = 0
+    peak_local_bytes: int = 0
     peak_host_bytes: int = 0
     host_fill_s: float = 0.0
     copy_stall_s: float = 0.0
@@ -314,11 +343,82 @@ def _degree_update(deg, chunk):
     return deg.at[-1].set(0)
 
 
-def _account_pass_peaks(stats, stream, prefetch, *state_trees):
-    stats.peak_device_bytes = max(
-        stats.peak_device_bytes,
-        tree_bytes(*state_trees)
-        + stream.chunk_bytes * stream.inflight_buffers(prefetch),
+@functools.lru_cache(maxsize=None)
+def _sharded_degree_update(mesh):
+    """``_degree_update`` over the detect-pass placement ([n_blocks, bs, 2]
+    sharded on the within-block axis): local scatter-add + integer psum."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import block_chunk_spec
+
+    axes = tuple(mesh.axis_names)
+
+    def body(deg, blocks):
+        flat = blocks.reshape(-1, 2)
+        inc = jnp.zeros_like(deg).at[flat[:, 0]].add(1).at[flat[:, 1]].add(1)
+        return (deg + jax.lax.psum(inc, axes)).at[-1].set(0)
+
+    mapped = shard_map_compat(
+        body, mesh, in_specs=(P(), block_chunk_spec(mesh)), out_specs=P()
+    )
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
+def _detect_put(mesh, block_size: int):
+    """Chunk placement for the sharded detect pass: view the [C, 2] host
+    buffer as [n_blocks, block_size, 2] and shard the within-block axis
+    (``block_chunk_spec``) so the SCoDA block scan runs in lockstep."""
+    from jax.sharding import NamedSharding
+
+    from repro.sharding.rules import block_chunk_spec
+
+    sharding = NamedSharding(mesh, block_chunk_spec(mesh))
+
+    def put(buf):
+        blocks = np.asarray(buf).reshape(-1, block_size, 2)
+        return device_put_copied(blocks, sharding)
+
+    return put
+
+
+def _row_put(mesh):
+    """Chunk placement for the sharded supergraph pass: contiguous [C/D, 2]
+    row shards per device (``row_chunk_spec`` — StreamRunner's placement)."""
+    from jax.sharding import NamedSharding
+
+    from repro.sharding.rules import row_chunk_spec
+
+    sharding = NamedSharding(mesh, row_chunk_spec(mesh))
+
+    def put(buf):
+        return device_put_copied(np.asarray(buf), sharding)
+
+    return put
+
+
+def _chunk_edges(chunk) -> int:
+    """Edge count of a device chunk in either layout ([C,2] or [B,bs,2])."""
+    return int(np.prod(chunk.shape[:-1]))
+
+
+def _effective_mesh(mesh, shard: bool, *divisible: int):
+    """The mesh to shard on, or None: sharding must be requested, the mesh
+    multi-device, and every gated extent divisible by the device count."""
+    if mesh is None or not shard or mesh.size <= 1:
+        return None
+    if any(d % mesh.size != 0 for d in divisible):
+        return None
+    return mesh
+
+
+def _account_pass_peaks(stats, stream, prefetch, *state_trees, devices: int = 1):
+    state_b = tree_bytes(*state_trees)
+    chunk_b = stream.chunk_bytes * stream.inflight_buffers(prefetch)
+    stats.devices = max(stats.devices, devices)
+    stats.peak_device_bytes = max(stats.peak_device_bytes, state_b + chunk_b)
+    # Per-device analytic: state replicated, chunk buffers sharded 1/D.
+    stats.peak_local_bytes = max(
+        stats.peak_local_bytes, state_b + chunk_b // devices
     )
     stats.peak_host_bytes = max(
         stats.peak_host_bytes, stream.host_bytes(prefetch)
@@ -333,23 +433,47 @@ def stream_detect(
     put=None,
     prefetch: int = 1,
     stats: StreamStats | None = None,
+    mesh=None,
+    shard: bool = False,
 ):
     """Multi-round SCoDA over the chunk stream; graph degrees are fused into
-    the first pass. Returns (labels [n], scoda_deg [n], graph_deg [n])."""
+    the first pass. Returns (labels [n], scoda_deg [n], graph_deg [n]).
+
+    With ``mesh`` + ``shard`` the per-chunk updates run device-sharded
+    (bit-identical — core/scoda.py); the engine then owns chunk placement
+    (the detect pass needs ``block_chunk_spec``, so any caller ``put`` is
+    superseded). Falls back to the unsharded path unless ``block_size`` and
+    the chunk size divide by the device count.
+    """
+    m = _effective_mesh(mesh, shard, cfg.block_size, stream.chunk_size)
+    if m is not None and stream.chunk_size % cfg.block_size != 0:
+        m = None  # chunk must hold whole blocks to reshape [B, bs, 2]
+    if m is not None:
+        put = _detect_put(m, cfg.block_size)
+        upd = sharded_scoda_update(m, cfg)
+        deg_upd = _sharded_degree_update(m)
+    else:
+        upd, deg_upd = None, _degree_update
     state = scoda_init(n_nodes)
     gdeg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
     for r in range(cfg.rounds):
         thr = jnp.int32(round_threshold(cfg, r))
         for chunk in stream.device_chunks(put, prefetch, stats):
             if r == 0:
-                gdeg = _degree_update(gdeg, chunk)
-            state = scoda_update(state, chunk, thr, cfg)
+                gdeg = deg_upd(gdeg, chunk)
+            if m is not None:
+                state = upd(state, chunk, thr)
+            else:
+                state = scoda_update(state, chunk, thr, cfg)
             if stats is not None:
                 stats.chunks += 1
-                stats.edges_streamed += chunk.shape[0]
+                stats.edges_streamed += _chunk_edges(chunk)
     if stats is not None:
         stats.passes += cfg.rounds
-        _account_pass_peaks(stats, stream, prefetch, state, gdeg)
+        _account_pass_peaks(
+            stats, stream, prefetch, state, gdeg,
+            devices=m.size if m is not None else 1,
+        )
     labels, scoda_deg = scoda_finalize(state, n_nodes, cfg)
     return labels, scoda_deg, gdeg[:n_nodes]
 
@@ -369,6 +493,8 @@ def stream_supergraph(
     with_modularity: bool = True,
     agg_backend: str = "merge",
     time_agg: bool = False,
+    mesh=None,
+    shard: bool = False,
 ):
     """One fused pass: superedge aggregation + modularity accumulation.
 
@@ -376,9 +502,28 @@ def stream_supergraph(
     graph degree) and so needs no edge pass. Returns (Supergraph, Q) with Q
     None when ``with_modularity`` is false. ``agg_backend``/``time_agg``
     are the ``StreamConfig`` aggregation knobs (see its docstring).
+
+    With ``mesh`` + ``shard`` the aggregation/modularity chunk updates and
+    the node-keyed CMS sizing run device-sharded (bit-identical —
+    core/supergraph.py, core/modularity.py, core/cms.py); chunks are placed
+    row-sharded by the engine. Falls back to unsharded when the chunk size
+    doesn't divide by the device count.
     """
+    m = _effective_mesh(mesh, shard, stream.chunk_size)
     labels_dense, n_supernodes = dense_labels(labels, n_nodes)
-    sizes = community_sizes(labels_dense, node_deg, n_supernodes, s_cap, cms_cfg)
+    sizes = community_sizes(
+        labels_dense, node_deg, n_supernodes, s_cap, cms_cfg, mesh=m
+    )
+
+    if m is not None:
+        put = _row_put(m)
+        one_agg = sharded_agg_update(m, s_cap, max_super_edges, agg_backend)
+        mod_upd = sharded_modularity_update(m) if with_modularity else None
+    else:
+        def one_agg(st, chunk, ext):
+            return agg_update(st, chunk, ext, s_cap, max_super_edges, agg_backend)
+
+        mod_upd = modularity_update
 
     agg_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
     mod_ext = jnp.concatenate([labels_dense, jnp.array([-1], jnp.int32)])
@@ -387,21 +532,22 @@ def stream_supergraph(
     for chunk in stream.device_chunks(put, prefetch, stats):
         if time_agg and stats is not None:
             t0 = time.perf_counter()
-            agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges, agg_backend)
+            agg = one_agg(agg, chunk, agg_ext)
             jax.block_until_ready(agg)
             stats.agg_update_s += time.perf_counter() - t0
             stats.agg_chunks += 1
         else:
-            agg = agg_update(agg, chunk, agg_ext, s_cap, max_super_edges, agg_backend)
+            agg = one_agg(agg, chunk, agg_ext)
         if with_modularity:
-            mod = modularity_update(mod, chunk, mod_ext)
+            mod = mod_upd(mod, chunk, mod_ext)
         if stats is not None:
             stats.chunks += 1
-            stats.edges_streamed += chunk.shape[0]
+            stats.edges_streamed += _chunk_edges(chunk)
     if stats is not None:
         stats.passes += 1
         _account_pass_peaks(
-            stats, stream, prefetch, agg, mod, labels_dense, sizes, node_deg
+            stats, stream, prefetch, agg, mod, labels_dense, sizes, node_deg,
+            devices=m.size if m is not None else 1,
         )
     sedges, sweights, n_superedges = agg_finalize(agg)
     q = modularity_finalize(mod) if with_modularity else None
@@ -444,7 +590,8 @@ def stream_pipeline(
     stats = StreamStats(chunk_size=stream.chunk_size)
     t0 = time.perf_counter()
     labels, _scoda_deg, gdeg = stream_detect(
-        stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch, stats=stats
+        stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch,
+        stats=stats, mesh=cfg.mesh, shard=cfg.shard_detect,
     )
     jax.block_until_ready(labels)
     stats.stage_seconds["detect_s"] = time.perf_counter() - t0
@@ -455,6 +602,7 @@ def stream_pipeline(
         put=put, prefetch=cfg.prefetch, stats=stats,
         with_modularity=with_modularity,
         agg_backend=cfg.agg_backend, time_agg=cfg.time_agg,
+        mesh=cfg.mesh, shard=cfg.shard_detect,
     )
     jax.block_until_ready(sg.edges)
     stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0

@@ -195,6 +195,66 @@ agg_update = functools.partial(
 )(_agg_update_body)
 
 
+@functools.lru_cache(maxsize=None)
+def sharded_agg_update(mesh, s_cap: int, max_super_edges: int,
+                       agg_backend: str = "merge",
+                       kernel_backend: str = "auto"):
+    """Compiled sharded ``agg_update`` over ``mesh``.
+
+    The chunk arrives row-sharded (``row_chunk_spec``), state and labels
+    replicated. Merge path: each shard maps + dedupes its own C/D rows (the
+    sort is the expensive step, now D-way parallel), one ``all_gather``
+    concatenates the local runs back in row order, and a second dedupe
+    restores the single sorted run — bit-identical input to
+    ``merge_combine`` even at capacity overflow, because the unique pair
+    set and the (integer-valued float) summed weights match the one-device
+    dedupe exactly. Lexsort path: the gather of contiguous row shards
+    reproduces the original chunk arrays verbatim, then runs the baseline
+    unchanged. Requires ``chunk_len % mesh.size == 0`` — callers gate.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.compat import shard_map_compat
+    from repro.sharding.rules import row_chunk_spec
+
+    axes = tuple(mesh.axis_names)
+
+    def body(state, chunk, labels_ext):
+        a, b, w = _chunk_pairs(chunk, labels_ext, s_cap)
+        if agg_backend == "lexsort":
+            ga = jax.lax.all_gather(a, axes, axis=0, tiled=True)
+            gb = jax.lax.all_gather(b, axes, axis=0, tiled=True)
+            gw = jax.lax.all_gather(w, axes, axis=0, tiled=True)
+
+            def run(st):
+                return _agg_update_lexsort(st, ga, gb, gw, s_cap, max_super_edges)
+        elif agg_backend == "merge":
+            la, lb, lw = _dedupe_chunk(a, b, w, s_cap)
+            ga = jax.lax.all_gather(la, axes, axis=0, tiled=True)
+            gb = jax.lax.all_gather(lb, axes, axis=0, tiled=True)
+            gw = jax.lax.all_gather(lw, axes, axis=0, tiled=True)
+            ca, cb, cw = _dedupe_chunk(ga, gb, gw, s_cap)
+
+            def run(st):
+                pa, pb, pw, _ = st
+                return merge_ops.merge_combine(
+                    pa, pb, pw, ca, cb, cw, s_cap, backend=kernel_backend
+                )
+        else:
+            raise ValueError(f"unknown agg_backend {agg_backend!r}")
+        # Same short-circuit as the single-device path; the predicate is
+        # over the gathered (replicated) pairs, so every device agrees.
+        return jax.lax.cond(jnp.any(ga != s_cap), run, lambda st: st, state)
+
+    mapped = shard_map_compat(
+        body,
+        mesh,
+        in_specs=((P(), P(), P(), P()), row_chunk_spec(mesh), P()),
+        out_specs=(P(), P(), P(), P()),
+    )
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
 def agg_finalize(state):
     """(sedges [cap,2], sweights [cap], n_superedges) from aggregation state."""
     a, b, w, n = state
@@ -230,11 +290,26 @@ def community_sizes(
     n_supernodes: jnp.ndarray,
     s_cap: int,
     cms_cfg: cms_lib.CMSConfig,
+    mesh=None,
 ) -> jnp.ndarray:
     """CMS-estimated community sizes (paper §4.1): one sketch update per node,
-    weight = its true graph degree; queries beyond the live count are masked."""
+    weight = its true graph degree; queries beyond the live count are masked.
+
+    With ``mesh`` the node keys are sharded over devices (padded to a
+    multiple of the device count with the masked key -1) and the sketch is
+    merged by one ``psum`` — exact, since degrees are integer-valued.
+    """
     sketch = cms_lib.init(cms_cfg)
-    sketch = cms_lib.update(sketch, labels_dense, node_deg.astype(jnp.float32), cms_cfg)
+    weights = node_deg.astype(jnp.float32)
+    if mesh is not None and mesh.size > 1:
+        pad = (-labels_dense.shape[0]) % mesh.size
+        keys = jnp.concatenate(
+            [labels_dense, jnp.full((pad,), -1, jnp.int32)]
+        )
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), jnp.float32)])
+        sketch = cms_lib.sharded_update(mesh, cms_cfg)(sketch, keys, weights)
+    else:
+        sketch = cms_lib.update(sketch, labels_dense, weights, cms_cfg)
     sizes = cms_lib.query(cms_lib.finalize(sketch), jnp.arange(s_cap, dtype=jnp.int32), cms_cfg)
     return jnp.where(jnp.arange(s_cap) < n_supernodes, sizes, 0.0)
 

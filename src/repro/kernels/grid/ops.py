@@ -20,6 +20,7 @@ from repro.kernels.grid.ref import (
     bin_nodes,  # noqa: F401  (re-exported: binning shared by every backend)
     far_field_ref,
     near_field_ref,
+    near_field_rows,  # noqa: F401  (re-exported: sharded-layout halo path)
 )
 from repro.kernels.grid.tiled import far_field_pallas, near_field_pallas
 from repro.kernels.segment import ops as segment_ops

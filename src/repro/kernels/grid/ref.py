@@ -135,3 +135,54 @@ def near_field_ref(
     init = (jnp.zeros_like(x), jnp.zeros_like(y))
     (fx, fy), _ = jax.lax.scan(body, init, jnp.arange(-window, window + 1))
     return jnp.stack([fx, fy], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("kr", "window", "nl"))
+def near_field_rows(
+    pos_s: jnp.ndarray,  # [n, 2] f32, cell-sorted order (full arrays)
+    mass_s: jnp.ndarray,  # [n] f32, cell-sorted
+    cell_s: jnp.ndarray,  # [n] int32, sorted
+    kr: float,
+    window: int,
+    i0,
+    nl: int,
+) -> jnp.ndarray:
+    """Rows [i0, i0+nl) of ``near_field_ref`` → [nl, 2] (sorted order).
+
+    Same per-row math and k-scan accumulation order; neighbor values come
+    from a ±window halo around the row block (window-padded arrays + one
+    dynamic slice per shift) instead of rolling the full arrays, so the
+    sharded FA2 layout needs no cross-device sum for the near field —
+    ``psum``-free by construction. Out-of-range halo slots carry cell id -1
+    and are discarded by the same in-range mask as the full version, which
+    also zeroes their (finite) force terms — bitwise identical to slicing
+    ``near_field_ref``'s rows. ``i0`` may be traced.
+    """
+    n = pos_s.shape[0]
+    w = window
+    xp = jnp.pad(pos_s[:, 0], (w, w))
+    yp = jnp.pad(pos_s[:, 1], (w, w))
+    mp = jnp.pad(mass_s, (w, w))
+    cp = jnp.pad(cell_s, (w, w), constant_values=-1)
+    x = jax.lax.dynamic_slice_in_dim(xp, i0 + w, nl)
+    y = jax.lax.dynamic_slice_in_dim(yp, i0 + w, nl)
+    m = jax.lax.dynamic_slice_in_dim(mp, i0 + w, nl)
+    c = jax.lax.dynamic_slice_in_dim(cp, i0 + w, nl)
+    gidx = i0 + jnp.arange(nl)
+
+    def body(acc, k):
+        xs = jax.lax.dynamic_slice_in_dim(xp, i0 + w + k, nl)
+        ys = jax.lax.dynamic_slice_in_dim(yp, i0 + w + k, nl)
+        ms = jax.lax.dynamic_slice_in_dim(mp, i0 + w + k, nl)
+        cs = jax.lax.dynamic_slice_in_dim(cp, i0 + w + k, nl)
+        j = gidx + k
+        ok = (j >= 0) & (j < n) & (k != 0) & (cs == c)
+        dx = x - xs
+        dy = y - ys
+        d2 = dx * dx + dy * dy
+        mag = jnp.where(ok, kr * m * ms / jnp.maximum(d2, EPS2), 0.0)
+        return (acc[0] + mag * dx, acc[1] + mag * dy), None
+
+    init = (jnp.zeros_like(x), jnp.zeros_like(y))
+    (fx, fy), _ = jax.lax.scan(body, init, jnp.arange(-w, w + 1))
+    return jnp.stack([fx, fy], axis=1)

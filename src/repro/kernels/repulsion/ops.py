@@ -57,6 +57,53 @@ def repulsion_chunked(pos, mass, kr: float, radii=None, chunk: int = 1024,
     return acc[:n]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("nl", "kr", "chunk", "use_radii")
+)
+def repulsion_chunked_rows(pos, mass, i0, nl: int, kr: float, radii=None,
+                           chunk: int = 1024, use_radii: bool = True):
+    """Rows [i0, i0+nl) of ``repulsion_chunked`` without materializing the
+    rest: same padded j-chunk partition and in-chunk reduction order, so the
+    owned rows are bitwise identical (rows are independent in that scan).
+    The sharded FA2 layout (core/forceatlas2.layout_sharded) calls this with
+    each device's node range; ``i0`` may be traced. Keep the body in
+    lockstep with ``repulsion_chunked`` above — any drift breaks the
+    bit-identity the device-count CI matrix asserts.
+    """
+    n = pos.shape[0]
+    n_pad = ((n + chunk - 1) // chunk) * chunk
+    pos_p = _pad(pos, n_pad)
+    mass_p = _pad(mass, n_pad)
+    rad_p = _pad(radii, n_pad) if (radii is not None and use_radii) else jnp.zeros(n_pad, pos.dtype)
+    idx = jnp.arange(n_pad)
+
+    pr = jax.lax.dynamic_slice_in_dim(pos_p, i0, nl)
+    mr = jax.lax.dynamic_slice_in_dim(mass_p, i0, nl)
+    rr = jax.lax.dynamic_slice_in_dim(rad_p, i0, nl)
+    ir = jax.lax.dynamic_slice_in_dim(idx, i0, nl)
+
+    pj = pos_p.reshape(-1, chunk, 2)
+    mj = mass_p.reshape(-1, chunk)
+    rj = rad_p.reshape(-1, chunk)
+    ij = idx.reshape(-1, chunk)
+
+    def body(acc, blk):
+        pjc, mjc, rjc, ijc = blk
+        dx = pr[:, 0:1] - pjc[None, :, 0]
+        dy = pr[:, 1:2] - pjc[None, :, 1]
+        d2 = dx * dx + dy * dy
+        d = jnp.sqrt(jnp.maximum(d2, EPS * EPS))
+        eff = jnp.maximum(d - rr[:, None] - rjc[None, :], EPS) if use_radii else jnp.maximum(d, EPS)
+        mag = kr * mr[:, None] * mjc[None, :] / (eff * d)
+        mag = jnp.where(ir[:, None] == ijc[None, :], 0.0, mag)
+        fx = jnp.sum(mag * dx, axis=1)
+        fy = jnp.sum(mag * dy, axis=1)
+        return acc + jnp.stack([fx, fy], axis=1), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((nl, 2), pos.dtype), (pj, mj, rj, ij))
+    return acc
+
+
 def repulsion(pos, mass, kr: float, radii=None, backend: str = "auto",
               tile: int = 512):
     """FA2 repulsion forces. pos [n,2], mass [n] → [n,2].

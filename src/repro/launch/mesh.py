@@ -15,3 +15,14 @@ def make_host_mesh():
     """Single-device mesh with the production axis names — lets the same
     sharded step functions run on one CPU device (smoke tests, examples)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_stream_mesh(devices: int | None = None):
+    """1-D "data" mesh over the local devices — the streaming engine's
+    sharded detect/layout placement (core/stream.py, StreamConfig.mesh).
+    ``devices`` caps the mesh size (None = all available); on CPU, force
+    a multi-device mesh with XLA_FLAGS=--xla_force_host_platform_device_count=N.
+    """
+    avail = jax.device_count()
+    d = avail if devices is None else min(devices, avail)
+    return jax.make_mesh((d,), ("data",))

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import argparse
 import tempfile
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax
 import numpy as np
@@ -51,6 +51,24 @@ class StreamRunner:
     streams its own slice of the chunk (edge shards, DESIGN.md §4). Either
     way it copies (never aliases host memory), as the engine's staged disk
     path requires.
+
+    A chunk whose row count doesn't divide by the mesh device count can't
+    be row-sharded; ``put`` pads it to the next multiple with the engine's
+    invalid-edge sentinel (the trash node, a no-op row for every chunk
+    update — ``run`` records it). Standalone use before any ``run`` has no
+    sentinel to pad with, so such chunks fall back to replication.
+
+    Chunks-only sharding (``shard_chunks`` without ``shard_detect``) is a
+    placement mode: the compiler auto-partitions the per-chunk updates
+    around the sharded operand, which is a valid SCoDA run but may break
+    scatter ties in a different order than one device. Bit-identical
+    multi-device results are the ``StreamConfig.shard_detect`` /
+    ``shard_layout`` contract (explicit shard_map collectives,
+    core/stream.py), verified by the device-count CI matrix.
+
+    When constructed with a mesh and a ``StreamConfig`` that requests
+    sharding (``shard_detect``/``shard_layout``) without carrying a mesh of
+    its own, the runner threads its mesh into the engine config.
     """
 
     def __init__(self, cfg: BGVConfig, runner_cfg: StreamRunnerConfig | None = None,
@@ -58,16 +76,34 @@ class StreamRunner:
         self.cfg = cfg
         self.runner_cfg = runner_cfg or StreamRunnerConfig()
         self.mesh = mesh
+        self._trash = None  # invalid-edge sentinel (n_nodes); set by run()
+        stream = self.runner_cfg.stream
+        if (mesh is not None and stream.mesh is None
+                and (stream.shard_detect or stream.shard_layout)):
+            self.runner_cfg = replace(
+                self.runner_cfg, stream=replace(stream, mesh=mesh)
+            )
         if mesh is not None and self.runner_cfg.shard_chunks:
             self._sharding = NamedSharding(mesh, P(tuple(mesh.axis_names), None))
         else:
             self._sharding = None
 
     def put(self, chunk_np: np.ndarray) -> jax.Array:
+        if self._sharding is not None:
+            rem = chunk_np.shape[0] % self.mesh.size
+            if rem:
+                if self._trash is None:
+                    # No sentinel to pad with: replicate rather than shard.
+                    return device_put_copied(chunk_np, None)
+                pad = np.full(
+                    (self.mesh.size - rem, 2), self._trash, chunk_np.dtype
+                )
+                chunk_np = np.concatenate([chunk_np, pad])
         return device_put_copied(chunk_np, self._sharding)
 
     def run(self, source, n_nodes: int) -> BGVResult:
         """``source``: host edge array, EdgeStore, or edge-file path."""
+        self._trash = n_nodes
         return biggraphvis(
             source, n_nodes, self.cfg,
             stream=self.runner_cfg.stream, put=self.put,
@@ -109,9 +145,17 @@ def main() -> None:
                     default="memory",
                     help="edge source for the streamed run (non-memory "
                          "forms are written to a temp dir first)")
+    ap.add_argument("--shard", choices=("none", "chunks", "detect", "layout", "all"),
+                    default="none",
+                    help="multi-device mode over a 1-D mesh of all local "
+                         "devices: 'chunks' row-shards chunk buffers only "
+                         "(placement; scatter ties may break differently "
+                         "than one device), 'detect' shards the per-chunk "
+                         "edge passes and 'layout' node-partitions FA2 "
+                         "(both bit-identical), 'all' does everything "
+                         "(on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
-
-    from dataclasses import replace
 
     from repro.core.pipeline import default_config
     from repro.graph import mode_degree, planted_partition
@@ -128,9 +172,21 @@ def main() -> None:
     cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=args.block_size))
 
     res_one = biggraphvis(edges, n, cfg)
+    mesh = None
+    if args.shard != "none":
+        from repro.launch.mesh import make_stream_mesh
+
+        mesh = make_stream_mesh()
+        print(f"mesh: {mesh.size} devices ({jax.default_backend()})")
     runner = StreamRunner(cfg, StreamRunnerConfig(
-        stream=StreamConfig(chunk_size=args.chunk, prefetch=args.prefetch,
-                            agg_backend=args.agg_backend)))
+        stream=StreamConfig(
+            chunk_size=args.chunk, prefetch=args.prefetch,
+            agg_backend=args.agg_backend,
+            shard_detect=args.shard in ("detect", "all"),
+            shard_layout=args.shard in ("layout", "all"),
+        ),
+        shard_chunks=args.shard in ("chunks", "all"),
+    ), mesh=mesh)
     with tempfile.TemporaryDirectory() as tmp:
         if args.source == "memory":
             res_str = runner.run(edges, n)

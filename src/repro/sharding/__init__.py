@@ -4,4 +4,7 @@ from repro.sharding.rules import (
     filter_spec,
     params_shardings,
     batch_sharding,
+    row_chunk_spec,
+    block_chunk_spec,
+    linear_axis_index,
 )

@@ -8,7 +8,14 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, all_cells
 from repro.configs.base import input_specs
 from repro.launch.hlo_analysis import analyze_hlo
-from repro.sharding.rules import PROFILES, filter_spec, spec_for
+from repro.sharding.rules import (
+    PROFILES,
+    block_chunk_spec,
+    filter_spec,
+    linear_axis_index,
+    row_chunk_spec,
+    spec_for,
+)
 
 
 @pytest.fixture(scope="module")
@@ -53,6 +60,84 @@ def test_filter_spec_drops_missing_axes():
     mesh = _mesh_like((16, 16), ("data", "model"))
     s = filter_spec(P(("pod", "data"), None, "model"), mesh)
     assert s == P(("data",), None, "model")
+
+
+def test_filter_spec_multi_axis_entries():
+    mesh = _mesh_like((2, 8, 16), ("pod", "data", "model"))
+    # every axis present: spec passes through untouched
+    s = filter_spec(P(("pod", "data"), None, "model"), mesh)
+    assert s == P(("pod", "data"), None, "model")
+    # none of an entry's axes present → that entry degrades to None
+    s = filter_spec(P(("expert",), "replica", None), mesh)
+    assert s == P(None, None, None)
+
+
+def test_spec_for_non_divisible_on_multi_axis_extent():
+    # embed maps to ("pod", "data") = 32-way; 4096 % 32 == 0 shards,
+    # 4100 % 32 != 0 degrades that dim (and only that dim) to None.
+    mesh = _mesh_like((2, 16, 16), ("pod", "data", "model"))
+    prof = PROFILES["tp"]
+    s = spec_for((4096, 64), ("embed", "heads"), prof, mesh)
+    assert s[0] == ("pod", "data")
+    s = spec_for((4100, 64), ("embed", "heads"), prof, mesh)
+    assert s[0] is None
+    assert s[1] in ("model", ("model",))
+
+
+def test_spec_for_axis_reuse_across_mapped_tuples():
+    # "embed" already consumed "data"; a later dim whose mapping is only
+    # "data" must not reuse it even though its size divides the extent.
+    mesh = _mesh_like((4, 4), ("data", "model"))
+    prof = {"embed": ("data",), "mlp": ("data",)}
+    s = spec_for((64, 64), ("embed", "mlp"), prof, mesh)
+    assert s == P("data", None)
+
+
+def test_chunk_specs_cover_all_mesh_axes():
+    for shape, names in (((8,), ("data",)), ((2, 4), ("data", "model"))):
+        mesh = _mesh_like(shape, names)
+        assert row_chunk_spec(mesh) == P(tuple(names), None)
+        assert block_chunk_spec(mesh) == P(None, tuple(names), None)
+
+
+def test_stream_mesh_and_linear_axis_index():
+    """make_stream_mesh over the local devices; linear_axis_index inside a
+    shard_map body enumerates shards in the row order ``all_gather`` tiles
+    them (the identity the sharded engine's row slicing rests on)."""
+    from repro.kernels.compat import shard_map_compat
+    from repro.launch.mesh import make_stream_mesh
+
+    mesh = make_stream_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.size == jax.device_count()
+    assert make_stream_mesh(devices=1).size == 1  # cap honored
+
+    axes = tuple(mesh.axis_names)
+    sizes = tuple(mesh.shape[a] for a in axes)
+
+    def body():
+        idx = linear_axis_index(axes, sizes)
+        return jax.lax.all_gather(idx, axes, tiled=False)
+
+    got = shard_map_compat(body, mesh, in_specs=(), out_specs=P())()
+    np.testing.assert_array_equal(np.asarray(got), np.arange(mesh.size))
+
+
+def test_host_mesh_compatible_with_stream_chunk_specs():
+    """The production-named host mesh must accept the chunk placements and
+    the tp profile (the same code paths the real meshes run)."""
+    from jax.sharding import NamedSharding
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    assert set(mesh.axis_names) == {"data", "model"}
+    arr = jax.device_put(
+        jnp.zeros((4, 2), jnp.int32), NamedSharding(mesh, row_chunk_spec(mesh))
+    )
+    assert arr.shape == (4, 2)
+    s = spec_for((4096, 64, 16), ("embed", "heads", "head_dim"),
+                 PROFILES["tp"], mesh)
+    NamedSharding(mesh, filter_spec(s, mesh))  # constructible, no raise
 
 
 def test_all_runnable_cells_have_specs_and_builders():
