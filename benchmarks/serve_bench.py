@@ -1,0 +1,243 @@
+"""Tile-serving benchmark: zipfian pan/zoom traffic over the tile-pyramid
+service (repro/serve/tiles.py) — tiles/s, cache hit rate, and miss-latency
+percentiles, plus the service's two correctness bars: steady-state ticks
+must trigger **zero recompilation** (fixed tile shapes), and every served
+tile must be **bit-identical** to a direct one-shot ``render_arrays`` of
+the same viewport.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+    PYTHONPATH=src python -m benchmarks.serve_bench --quick --json s.json
+    PYTHONPATH=src python -m benchmarks.serve_bench --check
+    PYTHONPATH=src python -m benchmarks.run --only serve
+
+Phases: a warm-up renders every pyramid tile plus the drill pool (the
+compile phase — its cost is what ``launch/serve.py``'s persistent
+compilation cache amortizes across restarts), then the measured phase
+replays a ``synthetic_trace`` against a deliberately undersized LRU cache
+so steady-state misses exist and their re-render latency is measurable.
+
+CSV rows (name,us_per_call,derived) per the harness contract; ``--json``
+writes the structured records (the CI ``serve-smoke`` artifact).
+``--check`` asserts the acceptance bar: warm-cache hit rate ≥ 80%, zero
+steady-state recompiles, p99 miss latency under the tail bar, and served
+== direct bit-identity on sampled tiles.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import biggraphvis, default_config
+from repro.graph import mode_degree, planted_partition
+from repro.render import render_arrays
+from repro.serve.tiles import (
+    TileConfig,
+    TileEngine,
+    TilePyramid,
+    TileRequest,
+    TileSpec,
+    jit_compile_count,
+    synthetic_trace,
+)
+
+N_NODES = 3000
+N_COMMUNITIES = 30
+DRILL_POOL = 8
+# Measured-phase cache capacity as a fraction of the full working set
+# (pyramid + drill pool): small enough that eviction misses exist in
+# steady state, big enough that the zipf-hot set stays resident.
+CACHE_FRAC = 0.6
+CHECK_HIT_RATE = 0.80
+CHECK_P99_MISS_S = 2.0  # generous CI bar; ~0.2s measured on a laptop core
+IDENTITY_SAMPLES = 6
+
+
+def _setup(quick: bool):
+    edges, _ = planted_partition(N_NODES, N_COMMUNITIES, 0.15, 0.001, seed=42)
+    cfg = default_config(
+        N_NODES, len(edges), mode_degree(edges, N_NODES),
+        iterations=40 if quick else 60, s_cap=1024,
+    )
+    result = biggraphvis(edges, N_NODES, cfg)
+    tile_cfg = TileConfig(
+        tile_size=128 if quick else 256,
+        depth=3 if quick else 4,
+        drill_iterations=30 if quick else 60,
+    )
+    pyramid = TilePyramid(result, tile_cfg, source=edges, bgv_cfg=cfg)
+    return pyramid
+
+
+def _percentile(values, q: float) -> float:
+    return float(np.percentile(np.asarray(values), q)) if len(values) else 0.0
+
+
+def run(quick: bool = False, records: list | None = None):
+    pyramid = _setup(quick)
+    n_pyramid = sum(pyramid.n_tiles(z) ** 2 for z in range(pyramid.cfg.depth))
+    drills = pyramid.drillable_communities()[:DRILL_POOL]
+    tile_bytes = pyramid.cfg.tile_size ** 2 * 3
+    working_set = (n_pyramid + len(drills)) * tile_bytes
+    engine = TileEngine(
+        pyramid, cache_bytes=int(CACHE_FRAC * working_set), slots=8
+    )
+
+    # Phase 1 — warm-up: compiles every render entry the traffic can hit.
+    c0 = jit_compile_count()
+    t0 = time.perf_counter()
+    warmed = engine.warmup(drills=drills)
+    warm_s = time.perf_counter() - t0
+    warm_compiles = jit_compile_count() - c0
+    yield row(
+        "serve/warmup", warm_s,
+        f"tiles={warmed};compiles={warm_compiles}",
+    )
+
+    # Phase 2 — measured traffic against the undersized cache.
+    n_requests = 600 if quick else 2000
+    trace = synthetic_trace(
+        pyramid, n_requests, drill_pool=DRILL_POOL, seed=0
+    )
+    c1 = jit_compile_count()
+    hits0, misses0 = engine.cache.hits, engine.cache.misses
+    miss_lat: list[float] = []
+    t0 = time.perf_counter()
+    for spec in trace:
+        req = TileRequest(spec)
+        engine.submit(req)
+        while not req.done:
+            engine.tick()
+        if not req.hit:
+            miss_lat.append(req.latency_s)
+    dt = time.perf_counter() - t0
+    steady_compiles = jit_compile_count() - c1
+    hits = engine.cache.hits - hits0
+    hit_rate = hits / max(engine.cache.hits + engine.cache.misses
+                          - hits0 - misses0, 1)
+    p50, p99 = _percentile(miss_lat, 50), _percentile(miss_lat, 99)
+    yield row(
+        "serve/traffic", dt,
+        f"tiles_s={len(trace) / dt:.1f};hit_rate={hit_rate:.3f};"
+        f"misses={len(miss_lat)};p50_ms={p50 * 1e3:.0f};"
+        f"p99_ms={p99 * 1e3:.0f};recompiles={steady_compiles}",
+    )
+
+    # Phase 3 — served == direct bit-identity on sampled pyramid tiles:
+    # whatever the cache did, a served tile must equal a fresh one-shot
+    # render_arrays of the same viewport.
+    pyramid_specs = [s for s in trace if isinstance(s, TileSpec)]
+    rng = np.random.default_rng(7)
+    sample_idx = rng.choice(
+        len(pyramid_specs), size=min(IDENTITY_SAMPLES, len(pyramid_specs)),
+        replace=False,
+    )
+    identical = 0
+    samples = [pyramid_specs[int(i)] for i in sample_idx]
+    for spec in samples:
+        served = engine.request(spec)
+        direct, _ = render_arrays(
+            pyramid.result.positions,
+            np.sqrt(np.maximum(np.asarray(pyramid.result.sizes), 0.0)),
+            pyramid.result.groups,
+            np.asarray(pyramid.result.supergraph.edges),
+            edge_weights=np.asarray(pyramid.result.supergraph.weights),
+            cfg=pyramid.render_config(spec),
+        )
+        identical += int(np.array_equal(served, direct))
+    yield row(
+        "serve/identity", 0.0,
+        f"identical={identical}/{len(samples)}",
+    )
+
+    if records is not None:
+        records.append({
+            "kind": "serve",
+            "tile_size": pyramid.cfg.tile_size,
+            "depth": pyramid.cfg.depth,
+            "pyramid_tiles": n_pyramid,
+            "drill_pool": int(len(drills)),
+            "cache_bytes": engine.cache.capacity_bytes,
+            "warmup_s": warm_s,
+            "warmup_compiles": warm_compiles,
+            "requests": len(trace),
+            "seconds": dt,
+            "tiles_per_s": len(trace) / dt,
+            "hit_rate": hit_rate,
+            "misses": len(miss_lat),
+            "p50_miss_s": p50,
+            "p99_miss_s": p99,
+            "steady_compiles": steady_compiles,
+            "evictions": engine.cache.evictions,
+            "identity_ok": identical,
+            "identity_total": len(samples),
+        })
+
+
+def _check(records: list) -> list[str]:
+    """Acceptance bar (ISSUE 7): warm-cache hit rate ≥ 80%, zero
+    steady-state recompiles, tail latency under the bar, and bit-identity
+    of served vs direct tiles. Returns the result lines."""
+    (r,) = [r for r in records if r["kind"] == "serve"]
+    assert r["hit_rate"] >= CHECK_HIT_RATE, (
+        f"warm-cache hit rate {r['hit_rate']:.3f} < {CHECK_HIT_RATE}"
+    )
+    assert r["steady_compiles"] == 0, (
+        f"steady-state ticks recompiled {r['steady_compiles']} times "
+        "(tile shapes should be fixed after warm-up)"
+    )
+    assert r["misses"] > 0, (
+        "no steady-state misses — cache sizing broke; miss latency unmeasured"
+    )
+    assert r["p99_miss_s"] <= CHECK_P99_MISS_S, (
+        f"p99 miss latency {r['p99_miss_s']:.2f}s > {CHECK_P99_MISS_S}s"
+    )
+    assert r["identity_ok"] == r["identity_total"], (
+        f"served tiles diverged from direct render_arrays: "
+        f"{r['identity_ok']}/{r['identity_total']} identical"
+    )
+    return [
+        f"check: warm-cache hit rate {r['hit_rate']:.1%} ≥ {CHECK_HIT_RATE:.0%}",
+        f"check: steady-state recompiles {r['steady_compiles']} == 0",
+        f"check: p99 miss latency {r['p99_miss_s'] * 1e3:.0f}ms ≤ "
+        f"{CHECK_P99_MISS_S * 1e3:.0f}ms ({r['misses']} misses, "
+        f"p50 {r['p50_miss_s'] * 1e3:.0f}ms)",
+        f"check: served == direct render_arrays on "
+        f"{r['identity_ok']}/{r['identity_total']} sampled tiles",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="smaller sweep")
+    ap.add_argument("--json", default="",
+                    help="also write structured records to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="assert hit-rate/recompile/latency/identity bars")
+    args = ap.parse_args()
+
+    records: list = []
+    print("name,us_per_call,derived")
+    for line in run(quick=args.quick, records=records):
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "bench": "serve_bench",
+                "n_nodes": N_NODES,
+                "records": records,
+            }, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        from benchmarks.run import step_summary
+
+        lines = _check(records)
+        print("\n".join(lines))
+        step_summary("serve_bench", lines)
+
+
+if __name__ == "__main__":
+    main()

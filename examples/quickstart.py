@@ -15,14 +15,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (
+# Everything the quickstart needs is on the stable top-level API surface
+# (repro/__init__.py); write_svg/write_png are drawing extras.
+from repro import (
+    RenderConfig,
     biggraphvis,
     default_config,
     full_layout_colored,
-    write_svg,
+    render_arrays,
 )
+from repro.core import write_svg
 from repro.graph import mode_degree, planted_partition
-from repro.render import RenderConfig, render_arrays, write_png
+from repro.render import write_png
 
 
 def main() -> None:
@@ -35,10 +39,10 @@ def main() -> None:
     cfg = default_config(n, len(edges), delta, rounds=4, iterations=60, s_cap=4096)
     # Superedge aggregation runs the two-level sorted-merge backend by
     # default (StreamConfig.agg_backend="merge"; "lexsort" = old baseline).
-    # render_path= streams the supergraph drawing through the rasterizer
+    res = biggraphvis(edges, n, cfg)
+    # .render() streams the supergraph drawing through the rasterizer
     # (repro/render): superedge splats + supernode disks → PNG.
-    res = biggraphvis(edges, n, cfg,
-                      render_path=os.path.join(out, "supergraph.png"))
+    res.render(os.path.join(out, "supergraph.png"))
     print(
         f"BigGraphVis: {res.n_supernodes} supernodes, {res.n_superedges} superedges, "
         f"modularity={res.modularity:.3f}"

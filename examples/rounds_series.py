@@ -12,7 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import biggraphvis, default_config, write_svg
+from repro import biggraphvis, default_config
+from repro.core import write_svg
 from repro.graph import mode_degree, planted_partition
 
 

@@ -26,7 +26,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import StreamConfig, biggraphvis, default_config
+from repro import StreamConfig, biggraphvis, default_config
 from repro.data.edge_store import write_npy
 from repro.graph import mode_degree, planted_partition
 

@@ -1,0 +1,53 @@
+"""BigGraphVis reproduction — stable public API.
+
+The supported entry points, re-exported from their implementation
+modules so user code never needs deep imports:
+
+    from repro import biggraphvis, default_config, render, TileEngine
+
+* pipeline — ``biggraphvis`` / ``default_config`` / ``BGVConfig`` /
+  ``BGVResult`` (with ``BGVResult.render``) / ``full_layout_colored``
+* streaming engine — ``StreamConfig`` / ``StreamStats`` /
+  ``EdgeStore`` sources (``as_edge_store`` accepts arrays, stores, and
+  ``.npy``/``.bin``/shard paths)
+* rendering — ``render`` / ``render_arrays`` / ``RenderConfig``
+* serving — ``TileEngine`` / ``TilePyramid`` / ``TileConfig`` /
+  ``TileSpec`` / ``DrillSpec`` (repro/serve/tiles.py)
+
+Imports are lazy (PEP 562), so ``import repro`` stays cheap and CLI
+modules (``python -m repro.data.edge_store`` …) don't pay for the full
+stack. Everything outside ``__all__`` is internal and may move between
+releases; tests/test_api.py pins this surface and its signatures.
+"""
+import importlib
+
+_EXPORTS = {
+    "BGVConfig": "repro.core.pipeline",
+    "BGVResult": "repro.core.pipeline",
+    "DrillSpec": "repro.serve.tiles",
+    "EdgeStore": "repro.data.edge_store",
+    "RenderConfig": "repro.render",
+    "StreamConfig": "repro.core.stream",
+    "StreamStats": "repro.core.stream",
+    "TileConfig": "repro.serve.tiles",
+    "TileEngine": "repro.serve.tiles",
+    "TilePyramid": "repro.serve.tiles",
+    "TileSpec": "repro.serve.tiles",
+    "as_edge_store": "repro.data.edge_store",
+    "biggraphvis": "repro.core.pipeline",
+    "default_config": "repro.core.pipeline",
+    "full_layout_colored": "repro.core.pipeline",
+    "render": "repro.render",
+    "render_arrays": "repro.render",
+}
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute '{name}'")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -33,6 +33,7 @@ from repro.core.pipeline import (
     BGVConfig,
     BGVResult,
     biggraphvis,
+    default_cms_cols,
     default_config,
     full_layout_colored,
 )

@@ -20,6 +20,7 @@ the chunked engine with device placement and host prefetch.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -57,6 +58,56 @@ class BGVResult:
     timings: dict = field(default_factory=dict)
     stream: StreamStats | None = None  # chunked-engine accounting
 
+    def render(self, path: str | None = None, cfg=None):
+        """Rasterize this result's supergraph drawing (paper §4.3) through
+        the streaming renderer — the one render entry point shared by the
+        batch path and the tile service (repro/serve/tiles.py renders
+        viewport-restricted tiles of the same scene).
+
+        ``path`` additionally writes a PNG; ``cfg`` is an optional
+        ``repro.render.RenderConfig``. Returns ``(image [H, W, 3] uint8,
+        RenderStats)`` and records the wall time in
+        ``timings["render_s"]``.
+        """
+        # Local import: repro.render consumes this module's BGVResult.
+        from repro.render import render as render_result
+
+        t0 = time.perf_counter()
+        out = render_result(self, path, cfg=cfg)
+        self.timings["render_s"] = time.perf_counter() - t0
+        return out
+
+
+# The render_path=/render_cfg= shims warn once per process, not per call
+# (a streaming driver may invoke biggraphvis in a loop).
+_RENDER_KWARGS_WARNED = False
+
+
+def _warn_render_kwargs() -> None:
+    global _RENDER_KWARGS_WARNED
+    if not _RENDER_KWARGS_WARNED:
+        warnings.warn(
+            "biggraphvis(render_path=, render_cfg=) is deprecated; call "
+            ".render(path, cfg=...) on the returned BGVResult instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        _RENDER_KWARGS_WARNED = True
+
+
+def default_cms_cols(n_edges: int) -> int:
+    """Count-min-sketch width used by ``default_config``:
+    ``max(256, |E| // 1000)`` — pinned by tests/test_api.py.
+
+    This is denser than the seed docstring's claimed ``1e-4·|E|``: at the
+    paper's 34M-edge ceiling 1e-4 gives a 3.4k-column sketch whose
+    collision bias visibly inflates small-community sizes, and at the
+    CPU-scale suite sizes it would pin every graph at the 256 floor. One
+    column per ~1000 edges keeps the §4.2 size estimates reliable across
+    both regimes for 4 hash rows.
+    """
+    return max(256, n_edges // 1000)
+
 
 def default_config(
     n_nodes: int,
@@ -70,14 +121,16 @@ def default_config(
     grid_window: int = 32,
     grid_rebuild: int = 1,
 ) -> BGVConfig:
-    """Paper defaults: 4 hash rows, cols ≈ 1e-4·|E| (min 256), δ = mode degree.
+    """Paper-shaped defaults: 4 hash rows, CMS cols = max(256, |E| // 1000)
+    (``default_cms_cols`` — see its docstring for why the sketch is denser
+    than the 1e-4·|E| the seed docstring claimed), δ = mode degree.
 
     ``repulsion``/``grid_*`` select the FA2 backend for the supergraph
     layout and seed the grid parameters ``full_layout_colored`` reuses
     (see the backend matrix in core/forceatlas2.py): "exact" is right for
     supergraphs; "grid"/"grid_pallas" are the tiled full-graph fast path.
     """
-    cols = max(256, n_edges // 1000)
+    cols = default_cms_cols(n_edges)
     return BGVConfig(
         scoda=ScodaConfig(degree_threshold=degree_threshold, rounds=rounds),
         cms=cms_lib.CMSConfig(rows=4, cols=cols),
@@ -155,10 +208,9 @@ def biggraphvis(
     chunk buffers (launch/stream_runner.py passes a sharded forced-copy
     device_put; None selects the engine default for the source).
 
-    ``render_path`` additionally rasterizes the supergraph drawing to a
-    PNG through the streaming renderer (repro/render — paper §4.3's
-    colored output), with ``render_cfg`` an optional ``RenderConfig``;
-    the raster time lands in ``timings["render_s"]``.
+    ``render_path``/``render_cfg`` are deprecated shims (one
+    ``DeprecationWarning`` per process) forwarding to the render entry
+    point, ``BGVResult.render(path, cfg=...)`` — call that instead.
     """
     labels, _gdeg, sg, q, stats = stream_pipeline(
         source, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap, cfg.max_super_edges,
@@ -190,13 +242,9 @@ def biggraphvis(
         timings=t,
         stream=stats,
     )
-    if render_path is not None:
-        # Local import: repro.render consumes this module's BGVResult.
-        from repro.render import render as render_result
-
-        t0 = time.perf_counter()
-        render_result(result, render_path, cfg=render_cfg)
-        t["render_s"] = time.perf_counter() - t0
+    if render_path is not None or render_cfg is not None:
+        _warn_render_kwargs()
+        result.render(render_path, cfg=render_cfg)
     return result
 
 

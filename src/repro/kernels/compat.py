@@ -54,3 +54,37 @@ def device_put_copied(x, sharding=None):
     if _HAS_MAY_ALIAS:
         return jax.device_put(x, sharding, may_alias=False, donate=False)
     return jax.device_put(x, sharding)
+
+
+def enable_persistent_compilation_cache(path) -> bool:
+    """Point JAX's persistent compilation cache at ``path`` (created on
+    first write) and drop the size/compile-time floors so every executable
+    is cached. Restarted services then deserialize yesterday's
+    executables instead of recompiling them — without it, cold-start
+    compile dominates a tile server's first-request latency
+    (``launch/serve.py`` wires this into its start path).
+
+    Returns True when the cache engaged. The knob names have moved across
+    jax versions (``jax.config`` flags ≥ ~0.4.26, the
+    ``jax.experimental.compilation_cache`` module before), so this probes
+    and degrades to False — callers treat a cold cache as a slow start,
+    never an error.
+    """
+    try:
+        jax.config.update("jax_compilation_cache_dir", str(path))
+    except Exception:
+        try:  # pre-flag API
+            from jax.experimental.compilation_cache import compilation_cache
+
+            compilation_cache.set_cache_dir(str(path))
+        except Exception:
+            return False
+    for knob, value in (
+        ("jax_persistent_cache_min_entry_size_bytes", -1),
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+    ):
+        try:
+            jax.config.update(knob, value)
+        except Exception:  # older jax without the floor knobs: still cached
+            pass
+    return True

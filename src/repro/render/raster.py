@@ -57,7 +57,15 @@ class RenderConfig:
     ``backend`` is the kernels/raster dispatch (auto/ref/pallas/interpret),
     ``chunk_size``/``prefetch`` drive the EdgeChunkStream edge pass, and
     ``time_raster`` blocks per chunk to fill StreamStats raster timing
-    (costs copy/compute overlap; leave off outside benchmarks)."""
+    (costs copy/compute overlap; leave off outside benchmarks).
+
+    ``viewport`` renders a fixed world rectangle ``(x0, y0, x1, y1)``
+    instead of auto-fitting the scene's bounding box: the rect maps onto
+    the full image (no ``margin``), off-rect geometry is clipped by the
+    rasterizer's bounds checks, and splats crossing the rect boundary are
+    cut exactly at the pixel edge — so a grid of adjacent viewports tiles
+    the scene seamlessly (the tile-pyramid service, repro/serve/tiles.py).
+    Non-square rects keep the uniform (min-axis) scale, centered."""
 
     width: int = 1024
     height: int = 1024
@@ -69,6 +77,7 @@ class RenderConfig:
     chunk_size: int = 1 << 16  # edges resident on device per raster chunk
     prefetch: int = 1
     margin: float = 0.04  # blank border as a fraction of the image
+    viewport: tuple | None = None  # world rect (x0, y0, x1, y1) to render
     background: tuple = (255, 255, 255)
     edge_gain: float = 1.0  # density → intensity gains (log1p tone map)
     node_gain: float = 4.0
@@ -120,6 +129,17 @@ def _fit_transform(pos: np.ndarray, ws: int, hs: int, margin: float):
     scale = (1.0 - 2.0 * margin) * min(ws / span[0], hs / span[1])
     center = (lo + hi) / 2.0
     return float(scale), float(center[0]), float(center[1])
+
+
+def _viewport_transform(viewport, ws: int, hs: int):
+    """Uniform scale + center mapping the fixed world rect onto the full
+    image — the same (scale, ox, oy) form as ``_fit_transform`` so both
+    paths share the pixel-coordinate arithmetic bit for bit."""
+    x0, y0, x1, y1 = (float(c) for c in viewport)
+    if not (x1 > x0 and y1 > y0):
+        raise ValueError(f"degenerate viewport {viewport!r}: need x1>x0, y1>y0")
+    scale = min(ws / (x1 - x0), hs / (y1 - y0))
+    return scale, (x0 + x1) / 2.0, (y0 + y1) / 2.0
 
 
 @functools.partial(
@@ -333,8 +353,11 @@ def render_arrays(
     t_start = time.perf_counter()
 
     alive = radii > 0
-    bounds_src = pos[alive] if alive.any() else pos
-    scale, ox, oy = _fit_transform(bounds_src, ws, hs, cfg.margin)
+    if cfg.viewport is not None:
+        scale, ox, oy = _viewport_transform(cfg.viewport, ws, hs)
+    else:
+        bounds_src = pos[alive] if alive.any() else pos
+        scale, ox, oy = _fit_transform(bounds_src, ws, hs, cfg.margin)
     px = (pos[:, 0] - ox) * scale + ws / 2.0
     py = hs / 2.0 - (pos[:, 1] - oy) * scale  # y-up world → y-down raster
     r_px = np.where(

@@ -1,0 +1,249 @@
+"""Tile-pyramid service: LRU cache accounting, pyramid addressing,
+served-tile bit-identity vs direct renders (pyramid and drill-down),
+zero-recompile steady state, and engine tick batching."""
+import numpy as np
+import pytest
+
+from repro.core import biggraphvis, default_config, full_layout_colored
+from repro.graph import mode_degree, planted_partition
+from repro.render import RenderConfig, render_arrays
+from repro.serve.tiles import (
+    DrillSpec,
+    TileCache,
+    TileConfig,
+    TileEngine,
+    TilePyramid,
+    TileRequest,
+    TileSpec,
+    jit_compile_count,
+    synthetic_trace,
+)
+
+N, COMMUNITIES = 300, 6
+
+
+@pytest.fixture(scope="module")
+def scene():
+    edges, _ = planted_partition(N, COMMUNITIES, 0.3, 0.01, seed=1)
+    cfg = default_config(
+        N, len(edges), mode_degree(edges, N), iterations=10, s_cap=64
+    )
+    result = biggraphvis(edges, N, cfg)
+    return edges, cfg, result
+
+
+@pytest.fixture(scope="module")
+def pyramid(scene):
+    edges, cfg, result = scene
+    return TilePyramid(
+        result,
+        TileConfig(tile_size=64, depth=2, drill_iterations=5),
+        source=edges,
+        bgv_cfg=cfg,
+    )
+
+
+# -- TileCache ---------------------------------------------------------------
+
+
+def _tile(fill=0):
+    return np.full((2, 2), fill, np.uint8)  # 4 bytes
+
+
+def test_cache_lru_eviction_order_and_accounting():
+    cache = TileCache(capacity_bytes=8)  # room for two 4-byte tiles
+    cache.put("a", _tile(1))
+    cache.put("b", _tile(2))
+    assert cache.get("a")[0, 0] == 1  # freshens "a": "b" is now LRU
+    cache.put("c", _tile(3))  # evicts "b"
+    assert cache.keys() == ["a", "c"]
+    assert cache.get("b") is None
+    assert (cache.hits, cache.misses, cache.evictions) == (1, 1, 1)
+    assert cache.bytes == 8 and len(cache) == 2
+    assert cache.hit_rate == 0.5
+
+
+def test_cache_replace_same_key_updates_bytes():
+    cache = TileCache(capacity_bytes=64)
+    cache.put("k", _tile())
+    cache.put("k", np.zeros((4, 4), np.uint8))  # 16 bytes, same key
+    assert len(cache) == 1 and cache.bytes == 16
+    assert cache.evictions == 0
+
+
+def test_cache_zero_capacity_caches_nothing():
+    cache = TileCache(capacity_bytes=0)
+    cache.put("k", _tile())
+    assert len(cache) == 0 and cache.bytes == 0
+    assert cache.get("k") is None
+
+
+def test_cache_contains_is_stats_neutral():
+    cache = TileCache(capacity_bytes=64)
+    cache.put("k", _tile())
+    assert "k" in cache and "z" not in cache
+    assert cache.hits == 0 and cache.misses == 0
+
+
+# -- pyramid addressing ------------------------------------------------------
+
+
+def test_level0_viewport_is_world_bounds(pyramid):
+    assert pyramid.tile_viewport(0, 0, 0) == pytest.approx(pyramid.bounds)
+
+
+def test_level1_quadrants_partition_bounds(pyramid):
+    bx0, by0, bx1, by1 = pyramid.bounds
+    mx, my = (bx0 + bx1) / 2, (by0 + by1) / 2
+    # y=0 is the TOP row (max world y): raster order, world y-up.
+    assert pyramid.tile_viewport(1, 0, 0) == pytest.approx((bx0, my, mx, by1))
+    assert pyramid.tile_viewport(1, 1, 1) == pytest.approx((mx, by0, bx1, my))
+    with pytest.raises(ValueError):
+        pyramid.tile_viewport(1, 2, 0)
+
+
+def test_specs_enumerates_level_major(pyramid):
+    specs = list(pyramid.specs())
+    assert len(specs) == 1 + 4
+    assert specs[0] == TileSpec(0, 0, 0)
+    assert specs[1] == TileSpec(1, 0, 0)  # then x-major within a row
+
+
+# -- bit-identity ------------------------------------------------------------
+
+
+def test_served_tile_bit_identical_to_direct_render(pyramid):
+    engine = TileEngine(pyramid, cache_bytes=1 << 20, slots=4)
+    for spec in (TileSpec(0, 0, 0), TileSpec(1, 1, 0)):
+        served = engine.request(spec)
+        direct, _ = render_arrays(
+            pyramid.result.positions,
+            np.sqrt(np.maximum(np.asarray(pyramid.result.sizes), 0.0)),
+            pyramid.result.groups,
+            np.asarray(pyramid.result.supergraph.edges),
+            edge_weights=np.asarray(pyramid.result.supergraph.weights),
+            cfg=pyramid.render_config(spec),
+        )
+        assert served.shape == (64, 64, 3)
+        assert np.array_equal(served, direct)
+        # And a cache hit returns the same buffer content.
+        assert np.array_equal(engine.request(spec), direct)
+
+
+def test_drill_tile_bit_identical_to_direct_composition(scene, pyramid):
+    """A served drill tile equals an independently derived
+    full_layout_colored + fitted render of the same community (the member
+    mask and id remap are recomputed here, not via community_subgraph)."""
+    edges, cfg, result = scene
+    community = int(pyramid.drillable_communities()[0])
+    served = pyramid.render_tile(DrillSpec(community))
+
+    labels = np.asarray(result.labels)
+    members = np.nonzero(labels == community)[0]
+    e = np.asarray(edges)
+    internal = e[(labels[e[:, 0]] == community)
+                 & (labels[e[:, 1]] == community)]
+    remap = {int(v): i for i, v in enumerate(members)}
+    sub = np.array(
+        [[remap[int(u)], remap[int(v)]] for u, v in internal], np.int32
+    )
+    pos, groups = full_layout_colored(sub, len(members), cfg, iterations=5)
+    direct, _ = render_arrays(
+        pos,
+        np.full(len(members), 2.0, np.float32),
+        groups,
+        sub,
+        cfg=RenderConfig(width=64, height=64),
+    )
+    assert np.array_equal(served, direct)
+
+
+def test_drill_requires_source_and_cfg(scene):
+    _, _, result = scene
+    bare = TilePyramid(result, TileConfig(tile_size=64, depth=1))
+    with pytest.raises(RuntimeError, match="source"):
+        bare.render_tile(DrillSpec(0))
+    assert len(bare.drillable_communities()) == 0
+
+
+def test_drill_rejects_empty_community(pyramid):
+    labels = np.asarray(pyramid.result.labels)
+    empty = next(
+        c for c in range(len(pyramid.result.sizes))
+        if not np.any(labels == c)
+    )
+    with pytest.raises(ValueError, match="nothing to drill"):
+        pyramid.render_tile(DrillSpec(empty))
+
+
+def test_render_tile_rejects_unknown_spec(pyramid):
+    with pytest.raises(TypeError):
+        pyramid.render_tile("level0")
+
+
+# -- recompile meter ---------------------------------------------------------
+
+
+def test_rerender_triggers_no_recompile(pyramid):
+    for spec in pyramid.specs():
+        pyramid.render_tile(spec)  # warm every fixed-shape jit entry
+    c0 = jit_compile_count()
+    for spec in pyramid.specs():
+        pyramid.render_tile(spec)
+    assert jit_compile_count() - c0 == 0
+
+
+# -- engine ------------------------------------------------------------------
+
+
+def test_engine_slot_cap_and_duplicate_collapse(pyramid):
+    engine = TileEngine(pyramid, cache_bytes=1 << 20, slots=2)
+    specs = [TileSpec(1, 0, 0), TileSpec(1, 0, 0), TileSpec(1, 1, 0),
+             TileSpec(1, 0, 1)]
+    reqs = [TileRequest(s) for s in specs]
+    for r in reqs:
+        assert engine.submit(r)
+    assert engine.n_pending == 4
+    done = engine.tick()
+    # Two slots, but the duplicate collapses: 3 requests complete off 2
+    # renders; the 4th distinct address waits for the next tick.
+    assert len(done) == 3 and engine.rendered == 2
+    assert engine.n_pending == 1
+    assert engine.tick() and all(r.done for r in reqs)
+    assert all(r.tile is not None and not r.hit for r in reqs)
+    assert all(r.latency_s > 0 for r in reqs)
+
+    # Resubmitting any of them is now a cache hit: done before tick.
+    hit = TileRequest(specs[0])
+    engine.submit(hit)
+    assert hit.done and hit.hit and engine.n_pending == 0
+    assert engine.tick() == []
+
+
+def test_engine_warmup_fills_cache_and_is_idempotent(pyramid):
+    engine = TileEngine(pyramid, cache_bytes=1 << 20, slots=4)
+    n = engine.warmup()
+    assert n == len(list(pyramid.specs())) == len(engine.cache)
+    assert engine.warmup() == 0  # everything already cached
+    assert engine.cache.misses == 0  # warmup probes are stats-neutral
+
+
+def test_engine_rejects_bad_slots(pyramid):
+    with pytest.raises(ValueError):
+        TileEngine(pyramid, slots=0)
+
+
+def test_synthetic_trace_deterministic_and_in_range(pyramid):
+    a = synthetic_trace(pyramid, 200, seed=5)
+    b = synthetic_trace(pyramid, 200, seed=5)
+    assert a == b
+    assert len(a) == 200
+    drillable = set(int(c) for c in pyramid.drillable_communities()[:8])
+    for spec in a:
+        if isinstance(spec, DrillSpec):
+            assert spec.community in drillable
+        else:
+            n = pyramid.n_tiles(spec.level)
+            assert 0 <= spec.level < pyramid.cfg.depth
+            assert 0 <= spec.x < n and 0 <= spec.y < n
+    assert synthetic_trace(pyramid, 200, seed=6) != a
