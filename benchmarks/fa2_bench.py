@@ -108,7 +108,7 @@ def bench_point(n: int, g: int, backend: str, edges_np: np.ndarray):
     cfg = _cfg(backend, g)
 
     def run():
-        pos, _ = fa2.layout(edges, w, mass, n, cfg)
+        pos, _, _ = fa2.layout(edges, w, mass, n, cfg)
         jax.block_until_ready(pos)
 
     t = time_call(run, repeat=2)  # per call = ITERS iterations, warm

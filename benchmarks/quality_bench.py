@@ -1,0 +1,241 @@
+"""Adaptive-stop FA2 quality vs the fixed-iteration baseline, gated.
+
+The convergence claim (ROADMAP "Convergence engineering") as an enforced
+acceptance bar instead of a trace plot: for each benchmark graph, a fixed
+500-iteration random-init layout (the legacy schedule) is scored against
+an adaptive run (``init="bfs"``, ``stop_tolerance``/``min_iterations``)
+with the sampled metrics from repro/quality — pivot stress, k-ring
+neighborhood preservation, edge-length CV and a crossing proxy — under
+one metric seed, so the two arms see identical sampling.
+
+    PYTHONPATH=src python -m benchmarks.quality_bench
+    PYTHONPATH=src python -m benchmarks.quality_bench --quick --json q.json --check
+    PYTHONPATH=src python -m benchmarks.run --only quality
+
+``--check`` asserts the acceptance bars: the adaptive arm stops within
+half the iteration cap while reaching >= 98% of the fixed baseline's
+quality on BOTH gated metrics (neighborhood preservation, and 1 − stress
+so "98% of quality" stays a greater-is-better ratio); repeated ``layout``
+calls at fixed shapes trigger zero recompiles (the adaptive carry and
+``lax.cond`` body are shape-stable); and with >= 2 devices the sharded
+adaptive layout — positions, trace, and ``iterations_run`` — is
+bit-identical to the single-device run (the converged flag is computed
+from replicated gathered forces, so every device freezes together; the
+CI ``quality-smoke`` job forces 2 host devices to keep this leg live).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import forceatlas2 as fa2
+from repro.graph import pad_edges, planted_partition
+from repro.graph.utils import degrees
+from repro.quality import layout_quality
+from repro.serve.tiles import jit_compile_count
+
+ITER_CAP = 500  # the paper's full-graph schedule; the fixed arm runs it all
+STOP_TOL = 0.05  # g_swing <= tol * g_traction freezes the scan ...
+MIN_ITERS = 200  # ... but never before the floor (the bfs init starts calm)
+ITER_BUDGET = ITER_CAP // 2  # --check: adaptive must stop within half the cap
+QUALITY_MIN = 0.98  # --check: >= 98% of fixed-arm quality on both metrics
+GRAPH_SEED = 5
+METRIC_SEED = 0
+
+# name, n, communities, p_in, p_out, repulsion backend, backend kwargs.
+GRAPHS_FULL = (
+    ("ppart-1k", 1000, 12, 0.2, 5e-4, "exact", {}),
+    ("ppart-4k", 4000, 40, 0.15, 2e-4, "grid",
+     {"grid_size": 32, "grid_window": 16}),
+)
+GRAPHS_QUICK = GRAPHS_FULL[:1]
+
+
+def _cfg(repulsion: str, extra: dict, adaptive: bool) -> fa2.FA2Config:
+    knobs = (
+        {"stop_tolerance": STOP_TOL, "min_iterations": MIN_ITERS,
+         "init": "bfs"}
+        if adaptive
+        else {}
+    )
+    return fa2.FA2Config(iterations=ITER_CAP, repulsion=repulsion,
+                         use_radii=False, **extra, **knobs)
+
+
+def _layout(edges, w, mass, n, cfg):
+    t0 = time.perf_counter()
+    pos, trace, iters = fa2.layout(edges, w, mass, n, cfg)
+    jax.block_until_ready(pos)
+    return np.asarray(pos), int(iters), time.perf_counter() - t0
+
+
+def bench_graph(name, n, k, p_in, p_out, repulsion, extra, records):
+    edges_np, _ = planted_partition(n, k, p_in, p_out, seed=GRAPH_SEED)
+    edges = jnp.asarray(pad_edges(edges_np, len(edges_np), n))
+    mass = degrees(edges, n).astype(jnp.float32) + 1.0
+    w = jnp.ones(edges.shape[0], jnp.float32)
+
+    arms = {}
+    for arm in ("fixed", "adaptive"):
+        cfg = _cfg(repulsion, extra, arm == "adaptive")
+        pos, iters, sec = _layout(edges, w, mass, n, cfg)
+        rec = {
+            "graph": name, "n": n, "arm": arm, "repulsion": repulsion,
+            "seconds": sec, "iterations_run": iters,
+            "iterations_cap": ITER_CAP,
+            **layout_quality(pos, edges_np, n, seed=METRIC_SEED),
+        }
+        arms[arm] = rec
+        if records is not None:
+            records.append(rec)
+        yield row(
+            f"quality/{name}/{arm}", sec,
+            f"iters={iters};stress={rec['stress']:.4f};"
+            f"np={rec['neighborhood']:.4f};edge_cv={rec['edge_cv']:.3f};"
+            f"crossing={rec['crossing']:.4f}",
+        )
+
+    # Recompile guard: two more adaptive calls at the same shapes must hit
+    # the jit cache (a flat jax.monitoring compile-count delta).
+    acfg = _cfg(repulsion, extra, True)
+    base = jit_compile_count()
+    for _ in range(2):
+        _layout(edges, w, mass, n, acfg)
+    delta = jit_compile_count() - base
+    if records is not None:
+        records.append({"graph": name, "arm": "recompile",
+                        "repeat_calls": 2, "compile_delta": delta})
+    yield row(f"quality/{name}/recompile", 0.0, f"compile_delta={delta}")
+
+    # Sharded adaptive bit-identity (lives only with a real multi-device
+    # mesh; the CI job forces 2 host devices so this leg always runs there).
+    d = jax.device_count()
+    if d > 1 and n % d == 0:
+        from repro.launch.mesh import make_stream_mesh
+
+        mesh = make_stream_mesh()
+        pos1, trace1, it1 = fa2.layout(edges, w, mass, n, acfg)
+        posd, traced, itd = fa2.layout_sharded(edges, w, mass, n, acfg, mesh)
+        bit = (
+            np.array_equal(np.asarray(pos1), np.asarray(posd))
+            and np.array_equal(np.asarray(trace1), np.asarray(traced))
+            and int(it1) == int(itd)
+        )
+        if records is not None:
+            records.append({"graph": name, "arm": "sharded", "devices": d,
+                            "bit_identical": bool(bit),
+                            "iterations_run": int(itd)})
+        yield row(f"quality/{name}/sharded", 0.0,
+                  f"devices={d};bit_identical={bit}")
+
+
+def run(quick: bool = False, records: list | None = None):
+    """Yield CSV rows (and append structured records) per graph."""
+    graphs = GRAPHS_QUICK if quick else GRAPHS_FULL
+    for name, n, k, p_in, p_out, repulsion, extra in graphs:
+        yield from bench_graph(name, n, k, p_in, p_out, repulsion, extra,
+                               records)
+
+
+def _check(records: list) -> list[str]:
+    """Acceptance bars (see module docstring). Returns the result lines
+    (printed and fed to ``run.step_summary``)."""
+    by_graph: dict[str, dict] = {}
+    for r in records:
+        if r.get("arm") in ("fixed", "adaptive"):
+            by_graph.setdefault(r["graph"], {})[r["arm"]] = r
+    assert by_graph, "no layout records"
+    lines = []
+    for g, arms in by_graph.items():
+        f, a = arms["fixed"], arms["adaptive"]
+        assert a["iterations_run"] <= ITER_BUDGET, (
+            f"{g}: adaptive ran {a['iterations_run']} iterations "
+            f"(budget: {ITER_BUDGET} = half the {ITER_CAP} cap)"
+        )
+        np_ratio = a["neighborhood"] / max(f["neighborhood"], 1e-12)
+        stress_q = (1.0 - a["stress"]) / max(1.0 - f["stress"], 1e-12)
+        assert np_ratio >= QUALITY_MIN, (
+            f"{g}: neighborhood preservation {a['neighborhood']:.4f} is "
+            f"{np_ratio:.3f}x the fixed baseline {f['neighborhood']:.4f} "
+            f"(bar: {QUALITY_MIN})"
+        )
+        assert stress_q >= QUALITY_MIN, (
+            f"{g}: stress quality (1-stress) {1 - a['stress']:.4f} is "
+            f"{stress_q:.3f}x the fixed baseline {1 - f['stress']:.4f} "
+            f"(bar: {QUALITY_MIN})"
+        )
+        lines.append(
+            f"check: {g} adaptive stopped at {a['iterations_run']}/"
+            f"{ITER_CAP} with np {np_ratio:.2f}x, 1-stress "
+            f"{stress_q:.2f}x the fixed baseline (bars: <= {ITER_BUDGET}, "
+            f">= {QUALITY_MIN}x)"
+        )
+    recompiles = [r for r in records if r.get("arm") == "recompile"]
+    assert recompiles, "no recompile records"
+    for r in recompiles:
+        assert r["compile_delta"] == 0, (
+            f"{r['graph']}: {r['compile_delta']} recompiles across "
+            f"{r['repeat_calls']} repeated fixed-shape layout calls"
+        )
+    lines.append(
+        f"check: zero recompiles across repeated layout calls "
+        f"({len(recompiles)} graphs)"
+    )
+    sharded = [r for r in records if r.get("arm") == "sharded"]
+    for r in sharded:
+        assert r["bit_identical"], (
+            f"{r['graph']}: sharded adaptive layout diverged from the "
+            f"single-device run on {r['devices']} devices"
+        )
+    if sharded:
+        lines.append(
+            f"check: sharded adaptive layout bit-identical on "
+            f"{sharded[0]['devices']} devices ({len(sharded)} graphs)"
+        )
+    else:
+        lines.append("check: sharded identity skipped (single device)")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="first graph only")
+    ap.add_argument("--json", default="",
+                    help="also write structured records to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the iteration-budget / quality-ratio / "
+                         "recompile / sharded-identity acceptance bars")
+    args = ap.parse_args()
+
+    records: list = []
+    print("name,us_per_call,derived")
+    for line in run(quick=args.quick, records=records):
+        print(line)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "bench": "quality_bench",
+                "backend": jax.default_backend(),
+                "devices": jax.device_count(),
+                "iterations_cap": ITER_CAP,
+                "stop_tolerance": STOP_TOL,
+                "min_iterations": MIN_ITERS,
+                "records": records,
+            }, f, indent=2)
+        print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        from benchmarks.run import step_summary
+
+        lines = _check(records)
+        print("\n".join(lines))
+        step_summary("quality_bench", lines)
+
+
+if __name__ == "__main__":
+    main()

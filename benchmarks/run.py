@@ -39,9 +39,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (agg_bench, fa2_bench, fig_params, kernels_bench,
-                            render_bench, roofline, serve_bench, shard_bench,
-                            stream_bench, table1_speedup, table2_hashes,
-                            table3_rounds)
+                            quality_bench, render_bench, roofline,
+                            serve_bench, shard_bench, stream_bench,
+                            table1_speedup, table2_hashes, table3_rounds)
 
     modules = {
         "table1": table1_speedup,
@@ -54,6 +54,7 @@ def main() -> None:
         "render": render_bench,
         "serve": serve_bench,
         "fa2": fa2_bench,
+        "quality": quality_bench,
         "shard": shard_bench,
         "roofline": roofline,
     }

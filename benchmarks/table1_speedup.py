@@ -48,10 +48,10 @@ def run(quick: bool = False) -> list[str]:
         w = jnp.ones(edges.shape[0], jnp.float32)
         lcfg = fa2.FA2Config(iterations=FULL_ITERS, repulsion="grid",
                              grid_size=64, use_radii=False)
-        pos, _ = fa2.layout(edges, w, mass, n, lcfg)  # compile warmup
+        pos, _, _ = fa2.layout(edges, w, mass, n, lcfg)  # compile warmup
         jax.block_until_ready(pos)
         t0 = time.perf_counter()
-        pos, _ = fa2.layout(edges, w, mass, n, lcfg)
+        pos, _, _ = fa2.layout(edges, w, mass, n, lcfg)
         jax.block_until_ready(pos)
         fa2_s = time.perf_counter() - t0
 

@@ -18,7 +18,16 @@ from repro.core.supergraph import (
     build_supergraph,
     community_sizes,
 )
-from repro.core.forceatlas2 import FA2Config, layout, step, init_positions
+from repro.core.forceatlas2 import (
+    FA2Config,
+    init_positions,
+    init_positions_bfs,
+    init_positions_degree,
+    initial_positions,
+    layout,
+    layout_sharded,
+    step,
+)
 from repro.core.modularity import modularity
 from repro.core.stream import (
     EdgeChunkStream,

@@ -43,10 +43,24 @@ monopole masses/centroids always track the current positions).
 
 Iterations run under ``lax.scan``; 100 iterations suffice for supergraphs
 (paper §4.2.3) vs 500 for full graphs.
+
+Convergence engineering (BatchLayout, PAPERS.md): the fixed iteration
+count is an upper bound, not a schedule. With ``stop_tolerance`` > 0 the
+scan carries a ``converged`` flag and freezes the body via ``lax.cond``
+once the controller's global swing falls to ``stop_tolerance`` × global
+traction (after ``min_iterations``) — same compiled shape, near-zero cost
+for frozen steps, and ``layout`` reports ``iterations_run``. The
+per-iteration trace is (g_swing, g_traction, global_speed); rows past
+``iterations_run`` are zero. ``init`` picks the starting positions:
+"random" (legacy uniform), "degree" (golden-angle sunflower spiral, heavy
+nodes at the center), or "bfs" (hop-distance rings from the heaviest
+node) — structured inits start closer to equilibrium so the stop
+criterion triggers earlier.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -55,6 +69,8 @@ import jax.numpy as jnp
 from repro.kernels.grid import ops as grid_ops
 from repro.kernels.repulsion import ops as repulsion_ops
 from repro.kernels.segment import ops as segment_ops
+
+_GOLDEN_ANGLE = 2.3999632297286533  # π(3 − √5)
 
 
 @dataclass(frozen=True)
@@ -71,6 +87,12 @@ class FA2Config:
     use_radii: bool = True  # supernode radii shift repulsion distances
     seed: int = 0
     dtype: str = "float32"  # position/force dtype of the layout loop
+    # Adaptive stopping: freeze the scan body once
+    # g_swing <= stop_tolerance * g_traction (0.0 = fixed iterations).
+    stop_tolerance: float = 0.0
+    min_iterations: int = 0  # never stop before this many iterations
+    init: str = "random"  # "random" | "degree" | "bfs"
+    init_bfs_rounds: int = 32  # BFS depth-propagation rounds for init="bfs"
 
 
 def init_positions(
@@ -79,6 +101,115 @@ def init_positions(
     return jax.random.uniform(
         key, (n, 2), minval=-scale, maxval=scale, dtype=jnp.dtype(dtype)
     )
+
+
+def init_positions_degree(
+    n: int, mass: jnp.ndarray, scale: float = 1000.0, dtype: str = "float32"
+) -> jnp.ndarray:
+    """Degree-greedy sunflower init: nodes placed on a golden-angle spiral
+    in descending-mass order, so hubs start at the center — where FA2's
+    equilibrium puts them — and leaves at the rim. Deterministic (argsort
+    ties break by index) and collision-free (every radius is distinct)."""
+    rank = jnp.zeros(n, jnp.int32).at[jnp.argsort(-mass)].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    rf = rank.astype(jnp.float32)
+    r = scale * jnp.sqrt((rf + 0.5) / n)
+    theta = rf * _GOLDEN_ANGLE
+    pos = jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=1)
+    return pos.astype(jnp.dtype(dtype))
+
+
+def init_positions_bfs(
+    edges: jnp.ndarray,
+    mass: jnp.ndarray,
+    n: int,
+    key: jax.Array,
+    rounds: int = 32,
+    smooth_rounds: int = 10,
+    scale: float = 1000.0,
+    dtype: str = "float32",
+) -> jnp.ndarray:
+    """BFS-ring + neighbor-smoothing init (the parallel analog of
+    BatchLayout's greedy "place next to your placed neighbors").
+
+    Scaffold: hop depths from the heaviest node via ``rounds`` scatter-min
+    relaxations (jit-friendly fixed trip count; unreached nodes land one
+    ring past the deepest reached one), radius ∝ depth, golden-angle
+    azimuth + a small keyed radial jitter to break exact ring degeneracy.
+    Then ``smooth_rounds`` Laplacian sweeps pull each node halfway to its
+    neighbors' centroid (rescaled to the scaffold's RMS radius each sweep
+    so the cloud doesn't collapse): graph-adjacent nodes — hence
+    communities — start co-located, which is what lets the adaptive stop
+    reach fixed-500-iteration quality in a fraction of the iterations
+    (benchmarks/quality_bench.py gates exactly this). Padded edge slots
+    (endpoint == n) write to trash rows that are dropped or reset."""
+    u, v = edges[:, 0], edges[:, 1]
+    seed_node = jnp.argmax(mass).astype(jnp.int32)
+    unreached = jnp.int32(rounds + 1)
+    depth = jnp.full(n + 1, unreached, jnp.int32).at[seed_node].set(0)
+
+    def body(depth, _):
+        new = depth.at[v].min(depth[u] + 1).at[u].min(depth[v] + 1)
+        return new.at[n].set(unreached), None
+
+    depth, _ = jax.lax.scan(body, depth, None, length=rounds)
+    depth = depth[:n]
+    deepest = jnp.max(jnp.where(depth >= unreached, 0, depth))
+    d = jnp.where(depth >= unreached, deepest + 1, depth).astype(jnp.float32)
+    r = scale * (d + 0.5) / (deepest.astype(jnp.float32) + 1.5)
+    jitter = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    r = r * (0.9 + 0.2 * jitter)
+    theta = jnp.arange(n, dtype=jnp.float32) * _GOLDEN_ANGLE
+    pos = jnp.stack([r * jnp.cos(theta), r * jnp.sin(theta)], axis=1)
+
+    deg = jnp.zeros(n + 1, jnp.float32).at[u].add(1.0).at[v].add(1.0)
+    degn = jnp.maximum(deg[:n], 1.0)
+    has_nbr = (deg[:n] > 0.0)[:, None]
+    rms0 = jnp.sqrt(jnp.mean(jnp.sum(pos * pos, axis=1)))
+
+    def smooth(pos, _):
+        ext = jnp.concatenate([pos, jnp.zeros((1, 2), jnp.float32)])
+        s = jnp.zeros((n + 1, 2), jnp.float32).at[u].add(ext[v]).at[v].add(ext[u])
+        mean = s[:n] / degn[:, None]
+        new = jnp.where(has_nbr, 0.5 * pos + 0.5 * mean, pos)
+        rms = jnp.sqrt(jnp.mean(jnp.sum(new * new, axis=1)))
+        return new * (rms0 / jnp.maximum(rms, 1e-9)), None
+
+    pos, _ = jax.lax.scan(smooth, pos, None, length=smooth_rounds)
+    return pos.astype(jnp.dtype(dtype))
+
+
+def initial_positions(
+    edges: jnp.ndarray, mass: jnp.ndarray, n: int, cfg: FA2Config
+) -> jnp.ndarray:
+    """Dispatch ``cfg.init``.
+
+    ``layout`` and ``layout_sharded`` both take their default starting
+    positions from the SAME compiled instance of this function
+    (``_initial_positions_jit``) rather than tracing it inline: op-by-op
+    eager execution and fused jit compilation round differently (e.g. FMA
+    contraction in the spiral radii), and the sharded bit-identity
+    contract needs the two entry points to start from bitwise-equal
+    positions."""
+    if cfg.init == "random":
+        return init_positions(n, jax.random.PRNGKey(cfg.seed), dtype=cfg.dtype)
+    if cfg.init == "degree":
+        return init_positions_degree(n, jnp.asarray(mass), dtype=cfg.dtype)
+    if cfg.init == "bfs":
+        return init_positions_bfs(
+            jnp.asarray(edges), jnp.asarray(mass), n,
+            jax.random.PRNGKey(cfg.seed), rounds=cfg.init_bfs_rounds,
+            dtype=cfg.dtype,
+        )
+    raise ValueError(
+        f"unknown init {cfg.init!r}: expected 'random', 'degree', or 'bfs'"
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "cfg"))
+def _initial_positions_jit(edges, mass, n: int, cfg: FA2Config):
+    return initial_positions(edges, mass, n, cfg)
 
 
 def _gravity(pos, mass, cfg: FA2Config):
@@ -206,7 +337,12 @@ def _repulsion_forces(pos, mass, radii, cfg: FA2Config, cell=None, order=None):
 
 
 def _apply_speed(state, f, mass, cfg: FA2Config):
-    """FA2 speed controller (Algorithm 1): swing/traction → displacement."""
+    """FA2 speed controller (Algorithm 1): swing/traction → displacement.
+
+    Returns the updated ``(pos, f, global_speed)`` state and the trace row
+    ``[g_swing, g_traction, global_speed]`` — the quantities the adaptive
+    stop criterion (and the convergence trace) are built from.
+    """
     pos, prev_force, global_speed = state
     swing = jnp.linalg.norm(f - prev_force, axis=-1)
     traction = 0.5 * jnp.linalg.norm(f + prev_force, axis=-1)
@@ -220,25 +356,34 @@ def _apply_speed(state, f, mass, cfg: FA2Config):
     # FA2 caps node displacement: speed ≤ 10 / |f|.
     local_speed = jnp.minimum(local_speed, 10.0 / jnp.maximum(fmag, 1e-9))
     pos = pos + local_speed[:, None] * f
-    return (pos, f, global_speed), fmag
+    row = jnp.stack([g_swing, g_traction, global_speed])
+    return (pos, f, global_speed), row
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
-def step(state, edges, weights, mass, radii, cfg: FA2Config, n: int):
+def step(
+    state, edges, weights, mass, radii, cfg: FA2Config, n: int,
+    cell=None, order=None,
+):
     """One FA2 iteration (Algorithm 1 body): forces → speeds → displacement.
 
     Single-step public API (launch/steps.py builds the distributed layout
-    cell on it): edge scatter and grid binning run inside the call.
-    ``layout`` hoists both out of its scan — prefer it for full runs.
+    cell on it): edge scatter runs inside the call. For the grid backends,
+    pass precomputed ``(cell, order)`` from ``kernels/grid.bin_and_sort``
+    to skip the per-call re-bin + argsort — repeated-step callers refresh
+    them every ``cfg.grid_rebuild`` steps, mirroring ``layout``'s scan
+    carry. ``layout`` also hoists the edge sort — prefer it for full runs.
+
+    Returns ``(state, trace_row)`` with the same ``[g_swing, g_traction,
+    global_speed]`` row ``layout`` traces per iteration.
     """
     pos, _, _ = state
     f = _gravity(pos, mass, cfg)
     f = f + _attraction(pos, edges, weights, n)
-    f = f + _repulsion_forces(pos, mass, radii, cfg)
+    f = f + _repulsion_forces(pos, mass, radii, cfg, cell=cell, order=order)
     return _apply_speed(state, f, mass, cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n"))
 def layout(
     edges: jnp.ndarray,
     weights: jnp.ndarray,
@@ -246,15 +391,26 @@ def layout(
     n: int,
     cfg: FA2Config,
     pos0: jnp.ndarray | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Run ``cfg.iterations`` FA2 steps. Returns (positions [n,2], trace)."""
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Run up to ``cfg.iterations`` FA2 steps.
+
+    Returns ``(positions [n,2], trace [iterations,3], iterations_run)``.
+    Trace rows are (g_swing, g_traction, global_speed) per iteration. With
+    ``cfg.stop_tolerance`` > 0 the scan body freezes (via ``lax.cond``)
+    once g_swing ≤ stop_tolerance · g_traction after ``min_iterations``;
+    frozen iterations cost almost nothing and trace as zero rows, and
+    ``iterations_run`` reports the live count (it is ``cfg.iterations``
+    exactly when the tolerance never triggered or adaptivity is off).
+    """
+    if pos0 is None:
+        pos0 = _initial_positions_jit(edges, mass, n, cfg)
+    return _layout_jit(edges, weights, mass, n, cfg, pos0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n"))
+def _layout_jit(edges, weights, mass, n: int, cfg: FA2Config, pos0):
     dtype = jnp.dtype(cfg.dtype)
-    key = jax.random.PRNGKey(cfg.seed)
-    pos = (
-        init_positions(n, key, dtype=cfg.dtype)
-        if pos0 is None
-        else pos0.astype(dtype)
-    )
+    pos = pos0.astype(dtype)
     weights = weights.astype(dtype)
     mass = mass.astype(dtype)
     # Hoisted per-call prep (once per layout, not once per iteration):
@@ -266,37 +422,59 @@ def layout(
     # actually reuses them; iteration 0 always rebuilds (0 % k == 0), so
     # the seed is never read and can be zeros.
     carry_grid = grid_state and cfg.grid_rebuild > 1
+    adaptive = cfg.stop_tolerance > 0.0
     state = (pos, jnp.zeros_like(pos), jnp.asarray(1.0, dtype))
     if carry_grid:
         z = jnp.zeros(n, jnp.int32)
         state = state + (z, z)
+    if adaptive:
+        state = state + (jnp.asarray(0, jnp.int32), jnp.asarray(False))
 
-    def body(state, it):
+    def live(core, cell, order, it):
+        pos = core[0]
         if carry_grid:
-            pos, prev_f, gs, cell, order = state
             cell, order = jax.lax.cond(
                 it % cfg.grid_rebuild == 0,
                 lambda: grid_ops.bin_and_sort(pos, cfg.grid_size),
                 lambda: (cell, order),
             )
-            core = (pos, prev_f, gs)
-        else:
-            core = state
-            pos = core[0]
-            if grid_state:
-                cell, order = grid_ops.bin_and_sort(pos, cfg.grid_size)
-            else:
-                cell = order = None
+        elif grid_state:
+            cell, order = grid_ops.bin_and_sort(pos, cfg.grid_size)
         f = _gravity(pos, mass, cfg)
         f = f + _attraction_sorted(pos, src, dst, w2, n)
         f = f + _repulsion_forces(pos, mass, radii, cfg, cell=cell, order=order)
-        core, fmag = _apply_speed(core, f, mass, cfg)
+        core, row = _apply_speed(core, f, mass, cfg)
+        return core, cell, order, row
+
+    def body(state, it):
+        core = state[:3]
+        cell = order = None
         if carry_grid:
-            return core + (cell, order), jnp.max(fmag)
-        return core, jnp.max(fmag)
+            cell, order = state[3], state[4]
+        if not adaptive:
+            core, cell, order, row = live(core, cell, order, it)
+            return core + ((cell, order) if carry_grid else ()), row
+
+        it_run, converged = state[-2], state[-1]
+
+        def live_branch():
+            c, cell2, order2, row = live(core, cell, order, it)
+            done = (it + 1 >= cfg.min_iterations) & (
+                row[0] <= cfg.stop_tolerance * row[1]
+            )
+            out = c + ((cell2, order2) if carry_grid else ())
+            return out + (it_run + 1, done), row
+
+        def frozen_branch():
+            return state, jnp.zeros(3, dtype)
+
+        return jax.lax.cond(converged, frozen_branch, live_branch)
 
     state, trace = jax.lax.scan(body, state, jnp.arange(cfg.iterations))
-    return state[0], trace
+    iterations_run = (
+        state[-2] if adaptive else jnp.asarray(cfg.iterations, jnp.int32)
+    )
+    return state[0], trace, iterations_run
 
 
 # --------------------------------------------------------------------------
@@ -321,7 +499,40 @@ def layout(
 # Every cross-device step is a concatenation (all_gather) — never a float
 # reduction — so D-device layouts are bit-identical to the single-device
 # CPU dispatch ("exact"/"grid" backends; tests/test_sharded_pipeline.py).
+# The adaptive stop composes with this for free: the gathered force array
+# (hence swing/traction, hence the converged flag) is replicated, so every
+# device freezes on the same iteration.
 # --------------------------------------------------------------------------
+
+
+_FALLBACK_WARNED: set[str] = set()
+
+
+def _warn_fallback(reason: str) -> None:
+    """Warn once per distinct reason that a configured mesh disengaged."""
+    if reason not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(reason)
+        warnings.warn(
+            f"layout_sharded: falling back to single-device layout ({reason})",
+            UserWarning,
+            stacklevel=3,
+        )
+
+
+def _sharded_fallback_reason(n: int, cfg: FA2Config, mesh) -> str | None:
+    """Why a non-None mesh cannot engage, or None if it can."""
+    if mesh.size <= 1:
+        return "mesh is trivial (1 device)"
+    if n % mesh.size != 0:
+        return f"n={n} does not divide evenly over {mesh.size} devices"
+    if cfg.repulsion in ("grid_pallas", "grid_dense"):
+        return f"repulsion={cfg.repulsion!r} has no sharded form"
+    if cfg.repulsion == "grid" and cfg.dtype != "float32":
+        return (
+            f"the sharded grid path runs in float32 (kernels/grid is "
+            f"float32-pinned) and has no dtype={cfg.dtype!r} form"
+        )
+    return None
 
 
 @functools.lru_cache(maxsize=None)
@@ -337,6 +548,7 @@ def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
     dtype = jnp.dtype(cfg.dtype)
     grid_state = cfg.repulsion == "grid"
     carry_grid = grid_state and cfg.grid_rebuild > 1
+    adaptive = cfg.stop_tolerance > 0.0
     kr = cfg.repulsion_k
 
     def sharded_body(pos0, mass, radii, src, dst, w2):
@@ -349,21 +561,19 @@ def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
         if carry_grid:
             z = jnp.zeros(n, jnp.int32)
             state = state + (z, z)
+        if adaptive:
+            state = state + (jnp.asarray(0, jnp.int32), jnp.asarray(False))
 
-        def body(state, it):
+        def live(core, cell, order, it):
+            pos = core[0]
             if carry_grid:
-                pos, prev_f, gs, cell, order = state
                 cell, order = jax.lax.cond(
                     it % cfg.grid_rebuild == 0,
                     lambda: grid_ops.bin_and_sort(pos, cfg.grid_size),
                     lambda: (cell, order),
                 )
-                core = (pos, prev_f, gs)
-            else:
-                core = state
-                pos = core[0]
-                if grid_state:
-                    cell, order = grid_ops.bin_and_sort(pos, cfg.grid_size)
+            elif grid_state:
+                cell, order = grid_ops.bin_and_sort(pos, cfg.grid_size)
 
             f_r = _gravity(rows(pos), rows(mass), cfg)
 
@@ -376,9 +586,10 @@ def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
             f_r = f_r + rows(att)
 
             if grid_state:
-                pos32 = pos.astype(jnp.float32)
-                mass32 = mass.astype(jnp.float32)
-                pos_s, mass_s, cell_s = pos32[order], mass32[order], cell[order]
+                # This path only engages for cfg.dtype == "float32"
+                # (layout_sharded falls back otherwise): the kernels/grid
+                # helpers are float32-pinned, so pos/mass are used as-is.
+                pos_s, mass_s, cell_s = pos[order], mass[order], cell[order]
                 ccent, cmass = grid_ops.cell_stats(
                     pos_s, mass_s, cell_s, cfg.grid_size * cfg.grid_size,
                     backend="ref",
@@ -406,19 +617,44 @@ def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
                     )
 
             f = jax.lax.all_gather(f_r, axes, axis=0, tiled=True)
-            core, fmag = _apply_speed(core, f, mass, cfg)
+            core, row = _apply_speed(core, f, mass, cfg)
+            return core, cell, order, row
+
+        def body(state, it):
+            core = state[:3]
+            cell = order = None
             if carry_grid:
-                return core + (cell, order), jnp.max(fmag)
-            return core, jnp.max(fmag)
+                cell, order = state[3], state[4]
+            if not adaptive:
+                core, cell, order, row = live(core, cell, order, it)
+                return core + ((cell, order) if carry_grid else ()), row
+
+            it_run, converged = state[-2], state[-1]
+
+            def live_branch():
+                c, cell2, order2, row = live(core, cell, order, it)
+                done = (it + 1 >= cfg.min_iterations) & (
+                    row[0] <= cfg.stop_tolerance * row[1]
+                )
+                out = c + ((cell2, order2) if carry_grid else ())
+                return out + (it_run + 1, done), row
+
+            def frozen_branch():
+                return state, jnp.zeros(3, dtype)
+
+            return jax.lax.cond(converged, frozen_branch, live_branch)
 
         state, trace = jax.lax.scan(body, state, jnp.arange(cfg.iterations))
-        return state[0], trace
+        iterations_run = (
+            state[-2] if adaptive else jnp.asarray(cfg.iterations, jnp.int32)
+        )
+        return state[0], trace, iterations_run
 
     mapped = shard_map_compat(
         sharded_body,
         mesh,
         in_specs=(P(), P(), P(), P(), P(), P()),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()),
     )
 
     def run(edges, weights, mass, pos0):
@@ -439,25 +675,31 @@ def layout_sharded(
     cfg: FA2Config,
     mesh,
     pos0: jnp.ndarray | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """``layout`` with the force pass node-partitioned over ``mesh``.
 
-    Falls back to ``layout`` when the mesh is trivial, ``n`` doesn't divide
-    by the device count, or the backend has no sharded form ("grid_pallas",
-    "grid_dense"). Bit-identical to the single-device *CPU* dispatch of
-    "exact"/"grid" (on TPU, ``layout``'s auto-dispatch picks Pallas kernels
-    this path does not mirror).
+    Falls back to ``layout`` — with a warn-once ``UserWarning`` naming the
+    reason — when the mesh is trivial, ``n`` doesn't divide by the device
+    count, the backend has no sharded form ("grid_pallas", "grid_dense"),
+    or the grid backend is asked for a non-float32 dtype (kernels/grid is
+    float32-pinned, so honoring ``cfg.dtype`` sharded is impossible; the
+    single-device path keeps its cast-in/cast-out semantics). ``mesh=None``
+    falls back silently — that is the caller opting out, not a surprise.
+    Bit-identical to the single-device *CPU* dispatch of "exact"/"grid"
+    (on TPU, ``layout``'s auto-dispatch picks Pallas kernels this path
+    does not mirror), including the adaptive stop: the converged flag is
+    computed from the replicated gathered forces, so the sharded run
+    freezes on exactly the same iteration.
     """
-    if (
-        mesh is None
-        or mesh.size <= 1
-        or n % mesh.size != 0
-        or cfg.repulsion in ("grid_pallas", "grid_dense")
-    ):
+    if mesh is None:
+        return layout(edges, weights, mass, n, cfg, pos0)
+    reason = _sharded_fallback_reason(n, cfg, mesh)
+    if reason is not None:
+        _warn_fallback(reason)
         return layout(edges, weights, mass, n, cfg, pos0)
     dtype = jnp.dtype(cfg.dtype)
     pos = (
-        init_positions(n, jax.random.PRNGKey(cfg.seed), dtype=cfg.dtype)
+        _initial_positions_jit(edges, mass, n, cfg)
         if pos0 is None
         else pos0.astype(dtype)
     )

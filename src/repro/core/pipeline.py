@@ -120,6 +120,9 @@ def default_config(
     grid_size: int = 64,
     grid_window: int = 32,
     grid_rebuild: int = 1,
+    stop_tolerance: float = 0.0,
+    min_iterations: int = 0,
+    init: str = "random",
 ) -> BGVConfig:
     """Paper-shaped defaults: 4 hash rows, CMS cols = max(256, |E| // 1000)
     (``default_cms_cols`` — see its docstring for why the sketch is denser
@@ -129,6 +132,10 @@ def default_config(
     layout and seed the grid parameters ``full_layout_colored`` reuses
     (see the backend matrix in core/forceatlas2.py): "exact" is right for
     supergraphs; "grid"/"grid_pallas" are the tiled full-graph fast path.
+    ``stop_tolerance``/``min_iterations`` enable FA2's adaptive stop
+    (``iterations`` becomes an upper bound) and ``init`` picks the
+    starting positions ("random" | "degree" | "bfs") — both also seed the
+    full-graph knobs ``full_layout_colored`` reuses.
     """
     cols = default_cms_cols(n_edges)
     return BGVConfig(
@@ -137,6 +144,8 @@ def default_config(
         layout=fa2.FA2Config(
             iterations=iterations, repulsion=repulsion, grid_size=grid_size,
             grid_window=grid_window, grid_rebuild=grid_rebuild,
+            stop_tolerance=stop_tolerance, min_iterations=min_iterations,
+            init=init,
         ),
         s_cap=s_cap or min(n_nodes, 65536),
         max_super_edges=min(4 * n_edges, 262144),
@@ -151,8 +160,12 @@ def _block(fn, *args):
 
 def layout_supergraph(
     sg: Supergraph, cfg: BGVConfig, mesh=None, shard_layout: bool = False
-) -> jnp.ndarray:
-    """ForceAtlas2 on the (small, device-resident) supergraph → [s_cap, 2].
+) -> tuple[jnp.ndarray, int]:
+    """ForceAtlas2 on the (small, device-resident) supergraph.
+
+    Returns ``(positions [s_cap, 2], iterations_run)`` — the latter is
+    ``cfg.layout.iterations`` unless the adaptive stop
+    (``cfg.layout.stop_tolerance``) froze the scan earlier.
 
     The layout stage is sized to the LIVE supernode count (padded to a
     power of two for shape reuse): laying out the full s_cap padding
@@ -180,8 +193,9 @@ def layout_supergraph(
     else:
         def run(e, w, m):
             return fa2.layout(e, w, m, s_layout, cfg.layout)
-    pos_live, _trace = _block(run, sedges, sg.weights[:e_layout], mass)
-    return jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
+    pos_live, _trace, iters_run = _block(run, sedges, sg.weights[:e_layout], mass)
+    pos = jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
+    return pos, int(iters_run)
 
 
 def biggraphvis(
@@ -222,12 +236,13 @@ def biggraphvis(
     }
 
     t0 = time.perf_counter()
-    pos = layout_supergraph(
+    pos, layout_iters = layout_supergraph(
         sg, cfg,
         mesh=stream.mesh if stream is not None else None,
         shard_layout=stream.shard_layout if stream is not None else False,
     )
     t["layout_s"] = time.perf_counter() - t0
+    t["layout_iterations"] = layout_iters
 
     groups = color_groups(sg.sizes)
     result = BGVResult(
@@ -249,7 +264,12 @@ def biggraphvis(
 
 
 def full_layout_colored(
-    edges_np: np.ndarray, n_nodes: int, cfg: BGVConfig, iterations: int = 500
+    edges_np: np.ndarray,
+    n_nodes: int,
+    cfg: BGVConfig,
+    iterations: int = 500,
+    stop_tolerance: float | None = None,
+    min_iterations: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Paper's comparison/styling path: full-graph FA2 (grid repulsion for
     scale) + BigGraphVis community colors. Returns (pos [n,2], groups [n]).
@@ -258,6 +278,11 @@ def full_layout_colored(
     as "unset" here and upgraded to the tiled "grid" backend above 4096
     nodes — an exact full-graph layout at larger n is a deliberate O(n²)
     choice; call ``fa2.layout`` directly for that.
+
+    ``stop_tolerance``/``min_iterations`` override ``cfg.layout``'s
+    adaptive-stop knobs for this call (the tile service caps drill-miss
+    latency this way — serve/tiles.py ``drill_stop_tolerance``); None
+    inherits the config. ``cfg.layout.init`` picks the initialization.
     """
     e_cap = len(edges_np)
     edges = jnp.asarray(pad_edges(edges_np, e_cap, n_nodes))
@@ -284,9 +309,21 @@ def full_layout_colored(
         gravity=cfg.layout.gravity,
         repulsion_k=cfg.layout.repulsion_k,
         dtype=cfg.layout.dtype,
+        stop_tolerance=(
+            cfg.layout.stop_tolerance
+            if stop_tolerance is None
+            else stop_tolerance
+        ),
+        min_iterations=(
+            cfg.layout.min_iterations
+            if min_iterations is None
+            else min_iterations
+        ),
+        init=cfg.layout.init,
+        init_bfs_rounds=cfg.layout.init_bfs_rounds,
     )
     mass = deg.astype(jnp.float32) + 1.0
     w = jnp.ones(edges.shape[0], jnp.float32)
-    pos, _ = fa2.layout(edges, w, mass, n_nodes, lcfg)
+    pos, _, _ = fa2.layout(edges, w, mass, n_nodes, lcfg)
     node_groups = color_groups(sg.sizes)[jnp.clip(sg.labels, 0, cfg.s_cap - 1)]
     return np.asarray(pos), np.asarray(node_groups)

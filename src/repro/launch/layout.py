@@ -61,6 +61,15 @@ def main() -> None:
     ap.add_argument("--grid-rebuild", type=int, default=1,
                     help="re-bin/re-sort grid cells every k iterations "
                          "(1 = every iteration, exact semantics)")
+    ap.add_argument("--stop-tolerance", type=float, default=0.0,
+                    help="adaptive stop: freeze the layout scan once global "
+                         "swing <= tol * traction (0 = fixed iterations)")
+    ap.add_argument("--min-iterations", type=int, default=0,
+                    help="never stop the layout before this many iterations")
+    ap.add_argument("--init", default="random",
+                    choices=("random", "degree", "bfs"),
+                    help="FA2 initial positions: uniform random, degree-"
+                         "ranked sunflower spiral, or BFS hop-distance rings")
     args = ap.parse_args()
 
     edges, n = load_edges(args.edges)
@@ -72,11 +81,16 @@ def main() -> None:
                          s_cap=min(args.s_cap, n),
                          repulsion=args.repulsion, grid_size=args.grid_size,
                          grid_window=args.grid_window,
-                         grid_rebuild=args.grid_rebuild)
+                         grid_rebuild=args.grid_rebuild,
+                         stop_tolerance=args.stop_tolerance,
+                         min_iterations=args.min_iterations,
+                         init=args.init)
     t0 = time.perf_counter()
     res = biggraphvis(edges, n, cfg)
     print(f"BigGraphVis: {res.n_supernodes} supernodes / {res.n_superedges} "
           f"superedges, modularity {res.modularity:.3f}, "
+          f"layout ran {res.timings['layout_iterations']}/"
+          f"{cfg.layout.iterations} iterations, "
           f"{time.perf_counter()-t0:.1f}s", file=sys.stderr)
 
     live = res.sizes > 0

@@ -328,10 +328,24 @@ def build_bgv_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
         grid_window=getattr(model, "layout_grid_window", 32),
     )
 
-    def layout_step(pos, prev_f, mass, radii, edges, weights):
-        state = (pos, prev_f, jnp.float32(1.0))
-        (pos, f, _), _ = fa2.step(state, edges, weights, mass, radii, cfg, n)
-        return pos, f
+    grid_cell = cfg.repulsion in ("grid", "grid_pallas")
+    if grid_cell:
+        # Grid cells take precomputed (cell, order) from kernels/grid
+        # ``bin_and_sort`` so the per-step re-bin + argsort is hoisted to
+        # the caller, which refreshes them on its own cadence (the
+        # repeated-step analog of ``layout``'s grid_rebuild scan carry).
+        def layout_step(pos, prev_f, mass, radii, edges, weights, cell, order):
+            state = (pos, prev_f, jnp.float32(1.0))
+            (pos, f, _), _ = fa2.step(
+                state, edges, weights, mass, radii, cfg, n,
+                cell=cell, order=order,
+            )
+            return pos, f
+    else:
+        def layout_step(pos, prev_f, mass, radii, edges, weights):
+            state = (pos, prev_f, jnp.float32(1.0))
+            (pos, f, _), _ = fa2.step(state, edges, weights, mass, radii, cfg, n)
+            return pos, f
 
     abstract = (
         jax.ShapeDtypeStruct((n, 2), jnp.float32),
@@ -344,6 +358,12 @@ def build_bgv_step(arch: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
     node_shard = _ns(mesh, all_ax, None)
     vec_shard = _ns(mesh, all_ax)
     shards = (node_shard, node_shard, vec_shard, vec_shard, edge_shard, vec_shard)
+    if grid_cell:
+        abstract = abstract + (
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        )
+        shards = shards + (vec_shard, vec_shard)
     meta = {"model_flops": float(10.0 * n * n + 20 * e), "scan_trip_count": 1, "tokens": n}
     return BuiltStep(layout_step, abstract, shards, meta,
                      out_shardings=(node_shard, node_shard))

@@ -140,6 +140,14 @@ def main() -> None:
                          "(core/forceatlas2.py backend matrix)")
     ap.add_argument("--grid-rebuild", type=int, default=1,
                     help="re-bin/re-sort grid cells every k layout iterations")
+    ap.add_argument("--stop-tolerance", type=float, default=0.0,
+                    help="FA2 adaptive stop: freeze the layout scan once "
+                         "global swing <= tol * traction (0 = fixed count)")
+    ap.add_argument("--min-iterations", type=int, default=0,
+                    help="never stop the layout before this many iterations")
+    ap.add_argument("--init", default="random",
+                    choices=("random", "degree", "bfs"),
+                    help="FA2 initial positions (core/forceatlas2.py)")
     ap.add_argument("--seed", type=int, default=5)
     ap.add_argument("--source", choices=("memory", "npy", "bin", "shards"),
                     default="memory",
@@ -168,7 +176,10 @@ def main() -> None:
     cfg = default_config(n, len(edges), delta, rounds=args.rounds,
                          iterations=args.iterations,
                          repulsion=args.repulsion,
-                         grid_rebuild=args.grid_rebuild)
+                         grid_rebuild=args.grid_rebuild,
+                         stop_tolerance=args.stop_tolerance,
+                         min_iterations=args.min_iterations,
+                         init=args.init)
     cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=args.block_size))
 
     res_one = biggraphvis(edges, n, cfg)

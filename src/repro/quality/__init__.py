@@ -1,0 +1,25 @@
+"""Scalable layout-quality metrics (ROADMAP "Convergence engineering").
+
+The harness that turns "converged in 150 instead of 500 iterations" into
+a gated claim (benchmarks/quality_bench.py): sampled stress, k-ring
+neighborhood preservation (spatial side via the kernels/grid binning),
+and edge-length-uniformity / crossing proxies. See quality/metrics.py
+for the definitions and sampling contracts.
+"""
+from repro.quality.metrics import (
+    bfs_hops,
+    crossing_proxy,
+    edge_length_cv,
+    layout_quality,
+    neighborhood_preservation,
+    sampled_stress,
+)
+
+__all__ = [
+    "bfs_hops",
+    "crossing_proxy",
+    "edge_length_cv",
+    "layout_quality",
+    "neighborhood_preservation",
+    "sampled_stress",
+]

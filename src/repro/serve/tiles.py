@@ -103,8 +103,15 @@ class TileConfig:
     (level 0 .. depth-1); ``margin`` pads the world bounding box so
     boundary disks aren't cut at level 0. ``supersample``/``edge_samples``/
     ``backend`` pass through to ``RenderConfig``. ``drill_iterations`` is
-    the FA2 iteration count of a drill-down's internal layout and
-    ``drill_node_radius`` its (world-unit) dot size."""
+    the FA2 iteration *cap* of a drill-down's internal layout and
+    ``drill_node_radius`` its (world-unit) dot size.
+
+    ``drill_stop_tolerance``/``drill_min_iterations`` enable FA2's
+    adaptive stop for drill layouts (core/forceatlas2.py): a drill miss
+    is the service's worst-case latency, and freezing the scan once
+    global swing stabilizes cuts it without a quality cliff
+    (benchmarks/quality_bench.py gates the equal-quality claim). The
+    defaults keep the legacy fixed-iteration behavior (tolerance 0)."""
 
     tile_size: int = 256
     depth: int = 3
@@ -114,6 +121,8 @@ class TileConfig:
     backend: str = "auto"
     drill_iterations: int = 60
     drill_node_radius: float = 2.0
+    drill_stop_tolerance: float = 0.0
+    drill_min_iterations: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -332,6 +341,8 @@ class TilePyramid:
         pos, groups = full_layout_colored(
             sub_edges, len(members), self.bgv_cfg,
             iterations=c.drill_iterations,
+            stop_tolerance=c.drill_stop_tolerance,
+            min_iterations=c.drill_min_iterations,
         )
         img, _ = render_arrays(
             pos,

@@ -10,7 +10,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # via `pip install -e .[dev]`). Environments without it still run the whole
 # suite through this minimal deterministic stand-in: @given replays a fixed
 # spread of examples per strategy instead of searching. Only the API surface
-# the suite uses (given / settings / strategies.integers) is provided.
+# the suite uses (given / settings / strategies.integers / strategies.floats)
+# is provided.
 try:
     import hypothesis  # noqa: F401
 except ImportError:  # pragma: no cover
@@ -24,6 +25,15 @@ except ImportError:  # pragma: no cover
         def examples(self, rng, k):
             vals = [self.lo, self.hi, (self.lo + self.hi) // 2]
             vals += [rng.randint(self.lo, self.hi) for _ in range(max(0, k - 3))]
+            return vals[:k]
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def examples(self, rng, k):
+            vals = [self.lo, self.hi, 0.5 * (self.lo + self.hi)]
+            vals += [rng.uniform(self.lo, self.hi) for _ in range(max(0, k - 3))]
             return vals[:k]
 
     def _given(*strategies):
@@ -49,6 +59,7 @@ except ImportError:  # pragma: no cover
     _stub = types.ModuleType("hypothesis")
     _strategies = types.ModuleType("hypothesis.strategies")
     _strategies.integers = lambda lo, hi: _Integers(lo, hi)
+    _strategies.floats = lambda lo, hi, **_kw: _Floats(lo, hi)
     _stub.given = _given
     _stub.settings = _settings
     _stub.strategies = _strategies

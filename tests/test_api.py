@@ -70,6 +70,7 @@ def test_signature_snapshot():
     assert list(inspect.signature(repro.default_config).parameters) == [
         "n_nodes", "n_edges", "degree_threshold", "rounds", "iterations",
         "s_cap", "repulsion", "grid_size", "grid_window", "grid_rebuild",
+        "stop_tolerance", "min_iterations", "init",
     ]
     assert list(
         inspect.signature(repro.BGVResult.render).parameters

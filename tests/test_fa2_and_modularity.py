@@ -38,12 +38,16 @@ def test_layout_finite_and_converging():
     mass = degrees(edges, n).astype(jnp.float32) + 1.0
     w = jnp.ones(edges.shape[0], jnp.float32)
     cfg = fa2.FA2Config(iterations=60, repulsion="exact", use_radii=False)
-    pos, trace = fa2.layout(edges, w, mass, n, cfg)
+    pos, trace, iters = fa2.layout(edges, w, mass, n, cfg)
     pos = np.asarray(pos)
     assert np.isfinite(pos).all()
-    # Max force in the last quarter below the first quarter: system relaxing.
+    assert int(iters) == cfg.iterations  # non-adaptive: every slot is live
+    # Global swing (trace column 0) in the last quarter below the first
+    # quarter: system relaxing.
     t = np.asarray(trace)
-    assert t[-len(t) // 4 :].mean() < t[: len(t) // 4].mean()
+    assert t.shape == (cfg.iterations, 3)
+    swing = t[:, 0]
+    assert swing[-len(swing) // 4 :].mean() < swing[: len(swing) // 4].mean()
 
 
 def test_layout_separates_communities():
@@ -54,7 +58,7 @@ def test_layout_separates_communities():
     mass = degrees(edges, n).astype(jnp.float32) + 1.0
     w = jnp.ones(edges.shape[0], jnp.float32)
     cfg = fa2.FA2Config(iterations=150, repulsion="exact", use_radii=False, seed=3)
-    pos, _ = fa2.layout(edges, w, mass, n, cfg)
+    pos, _, _ = fa2.layout(edges, w, mass, n, cfg)
     pos = np.asarray(pos)
     d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
     same = labels[:, None] == labels[None, :]
@@ -170,9 +174,9 @@ def test_layout_grid_pallas_matches_grid():
     edges, w, mass, n = _small_layout_inputs()
     base = fa2.FA2Config(iterations=8, repulsion="grid", grid_size=8,
                          use_radii=False, seed=7)
-    pos_ref, _ = fa2.layout(edges, w, mass, n, base)
+    pos_ref, _, _ = fa2.layout(edges, w, mass, n, base)
     pal = dataclasses.replace(base, repulsion="grid_pallas")
-    pos_pal, _ = fa2.layout(edges, w, mass, n, pal)
+    pos_pal, _, _ = fa2.layout(edges, w, mass, n, pal)
     pos_ref, pos_pal = np.asarray(pos_ref), np.asarray(pos_pal)
     assert np.isfinite(pos_ref).all()
     scale = np.abs(pos_ref).max()
@@ -186,7 +190,7 @@ def test_layout_dtype_threaded():
     for dt in ("float32", "bfloat16"):
         cfg = fa2.FA2Config(iterations=3, repulsion="exact", use_radii=False,
                             dtype=dt)
-        pos, trace = fa2.layout(edges, w, mass, n, cfg)
+        pos, trace, _ = fa2.layout(edges, w, mass, n, cfg)
         assert pos.dtype == jnp.dtype(dt), (dt, pos.dtype)
         assert trace.dtype == jnp.dtype(dt)
         assert np.isfinite(np.asarray(pos, np.float32)).all()
@@ -202,19 +206,19 @@ def test_layout_grid_rebuild_amortized():
     edges, w, mass, n = _small_layout_inputs(n=180, seed=3)
     every = fa2.FA2Config(iterations=3, repulsion="grid", grid_size=8,
                           use_radii=False, grid_rebuild=1, seed=1)
-    pos_1, _ = fa2.layout(edges, w, mass, n, every)
+    pos_1, _, _ = fa2.layout(edges, w, mass, n, every)
     # 3 iterations with rebuild cadence 1 vs a cadence longer than the run:
     # the stale path must diverge (it keeps iteration-0 binning throughout).
     stale = dataclasses.replace(every, grid_rebuild=50)
-    pos_stale, _ = fa2.layout(edges, w, mass, n, stale)
+    pos_stale, _, _ = fa2.layout(edges, w, mass, n, stale)
     assert np.isfinite(np.asarray(pos_stale)).all()
     assert not np.allclose(np.asarray(pos_stale), np.asarray(pos_1))
     # cadence == 1 via the cond path (rebuild every iteration) must agree
     # with the unconditional path bit-for-bit after one iteration.
     one_it = dataclasses.replace(every, iterations=1)
     one_it_stale = dataclasses.replace(stale, iterations=1)
-    p1, _ = fa2.layout(edges, w, mass, n, one_it)
-    p2, _ = fa2.layout(edges, w, mass, n, one_it_stale)
+    p1, _, _ = fa2.layout(edges, w, mass, n, one_it)
+    p2, _, _ = fa2.layout(edges, w, mass, n, one_it_stale)
     np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
                                rtol=1e-6, atol=1e-4)
 

@@ -122,25 +122,67 @@ def test_layout_sharded_matches_layout(repulsion):
     mass = jnp.zeros(N, jnp.float32).at[edges[:, 0]].add(1.0) + 1.0
     cfg = fa2.FA2Config(iterations=4, repulsion=repulsion, grid_size=8,
                         grid_window=8)
-    pos, trace = fa2.layout(edges, w, mass, N, cfg)
+    pos, trace, it = fa2.layout(edges, w, mass, N, cfg)
     mesh = make_stream_mesh()
-    pos_s, trace_s = fa2.layout_sharded(edges, w, mass, N, cfg, mesh)
+    pos_s, trace_s, it_s = fa2.layout_sharded(edges, w, mass, N, cfg, mesh)
     assert np.array_equal(np.asarray(pos), np.asarray(pos_s))
     assert np.array_equal(np.asarray(trace), np.asarray(trace_s))
+    assert int(it) == int(it_s) == cfg.iterations
 
 
 def test_layout_sharded_fallbacks():
-    """Non-divisible n and no-sharded-form backends fall back to layout."""
+    """Non-divisible n and no-sharded-form backends fall back to layout,
+    warning once (regression: the fallback used to be silent, so a
+    configured mesh could quietly never engage)."""
+    import warnings
+
     n = 99  # prime-ish: only divides a 1/3/9/11/33/99-device mesh
     edges = jnp.asarray([[0, 1], [1, 2], [2, 3]], jnp.int32)
     w = jnp.ones(3, jnp.float32)
     mass = jnp.ones(n, jnp.float32)
     cfg = fa2.FA2Config(iterations=2, repulsion="exact")
-    pos, _ = fa2.layout(edges, w, mass, n, cfg)
-    pos_s, _ = fa2.layout_sharded(edges, w, mass, n, cfg, make_stream_mesh())
+    pos, _, _ = fa2.layout(edges, w, mass, n, cfg)
+    fa2._FALLBACK_WARNED.clear()
+    with pytest.warns(UserWarning, match="falling back to single-device"):
+        pos_s, _, _ = fa2.layout_sharded(
+            edges, w, mass, n, cfg, make_stream_mesh())
     assert np.array_equal(np.asarray(pos), np.asarray(pos_s))
-    pos_n, _ = fa2.layout_sharded(edges, w, mass, n, cfg, None)
+    # Warn-once: the same reason does not warn again.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        fa2.layout_sharded(edges, w, mass, n, cfg, make_stream_mesh())
+    # mesh=None is the caller opting out — silent, no warning.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pos_n, _, _ = fa2.layout_sharded(edges, w, mass, n, cfg, None)
     assert np.array_equal(np.asarray(pos), np.asarray(pos_n))
+
+
+def test_layout_sharded_nonfloat32_grid_falls_back():
+    """Regression: the sharded grid path computed in hardcoded float32
+    whatever cfg.dtype asked for. It now refuses (warn + fall back to the
+    single-device path, which keeps its cast-in/cast-out semantics) rather
+    than silently produce a layout in the wrong precision."""
+    edges = jnp.asarray(_graph()[:256])
+    w = jnp.ones(edges.shape[0], jnp.float32)
+    mass = jnp.zeros(N, jnp.float32).at[edges[:, 0]].add(1.0) + 1.0
+    cfg = fa2.FA2Config(iterations=3, repulsion="grid", grid_size=8,
+                        grid_window=8, dtype="bfloat16")
+    mesh = make_stream_mesh()
+    if mesh.size > 1:
+        reason = fa2._sharded_fallback_reason(N, cfg, mesh)
+        assert reason is not None and "float32" in reason
+    fa2._FALLBACK_WARNED.clear()
+    pos, trace, it = fa2.layout(edges, w, mass, N, cfg)
+    with pytest.warns(UserWarning):
+        pos_s, trace_s, it_s = fa2.layout_sharded(edges, w, mass, N, cfg, mesh)
+    assert pos_s.dtype == jnp.bfloat16
+    assert np.array_equal(
+        np.asarray(pos, np.float32), np.asarray(pos_s, np.float32))
+    # float32 grid keeps its sharded form (no reason to refuse).
+    f32 = replace(cfg, dtype="float32")
+    if mesh.size > 1:
+        assert fa2._sharded_fallback_reason(N, f32, mesh) is None
 
 
 def test_repulsion_chunked_rows_bitwise():
