@@ -1,8 +1,12 @@
 """Shared benchmark plumbing: CPU-scale graph suite mirroring the paper's
 structural regimes + timing helpers. Results print as CSV
-(name,us_per_call,derived) per the harness contract."""
+(name,us_per_call,derived) per the harness contract; ``make_record`` /
+``record_from_csv`` / ``write_bench_json`` define the unified structured
+record schema every bench's JSON artifact (and ``benchmarks.run``'s
+repo-root ``BENCH_<name>.json`` files) shares."""
 from __future__ import annotations
 
+import json
 import time
 
 from repro.graph import planted_partition, powerlaw_graph
@@ -30,3 +34,67 @@ def time_call(fn, *args, repeat: int = 3, warmup: int = 1):
 
 def row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.0f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# Unified structured records — one schema for every bench JSON artifact:
+#   {"name": <row name>, "config": {...knobs...}, "metrics": {...numbers...}}
+# wrapped by write_bench_json as
+#   {"bench": ..., "timestamp": ..., "records": [...]}.
+# The timestamp is passed in by the runner (benchmarks/run.py) so record
+# construction stays deterministic and testable.
+
+
+def make_record(name: str, config: dict | None = None,
+                metrics: dict | None = None) -> dict:
+    """One benchmark measurement in the unified schema: ``name`` identifies
+    the measured row (the CSV row name), ``config`` holds the knobs that
+    produced it, ``metrics`` the measured numbers (``us_per_call`` plus any
+    derived values)."""
+    return {
+        "name": str(name),
+        "config": dict(config or {}),
+        "metrics": dict(metrics or {}),
+    }
+
+
+def _coerce(v: str):
+    """CSV derived values are strings; store numbers as numbers."""
+    try:
+        f = float(v)
+    except ValueError:
+        return v
+    return int(f) if f.is_integer() and "." not in v and "e" not in v.lower() else f
+
+
+def record_from_csv(line: str) -> dict | None:
+    """Parse one harness CSV row (``name,us_per_call,derived`` with derived
+    as ``k=v;k=v``) into a unified record; None for non-row lines (headers,
+    check summaries)."""
+    parts = line.split(",", 2)
+    if len(parts) < 2:
+        return None
+    name, us = parts[0], parts[1]
+    try:
+        us_val = float(us)
+    except ValueError:
+        return None  # header or prose line
+    metrics = {"us_per_call": us_val}
+    if len(parts) == 3 and parts[2]:
+        for kv in parts[2].split(";"):
+            if "=" in kv:
+                k, v = kv.split("=", 1)
+                metrics[k.strip()] = _coerce(v.strip())
+    return make_record(name, metrics=metrics)
+
+
+def write_bench_json(path: str, bench: str, records: list,
+                     timestamp: float | None = None, **extra) -> str:
+    """Write a bench's records in the unified wrapper schema. ``timestamp``
+    comes from the runner (unix seconds); ``extra`` keys land in the
+    wrapper (e.g. sweep-wide config)."""
+    payload = {"bench": bench, "timestamp": timestamp,
+               "records": records, **extra}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path

@@ -1,0 +1,182 @@
+"""Observability overhead: the streamed BigGraphVis workload timed with
+tracing off vs on — the ``repro.obs`` instrumentation must stay off the
+hot path (``--check`` gates traced-on ≤ 3% slower, best-of-N both sides),
+and the traced run's Chrome-trace export must carry the full span tree
+(detect/supergraph/layout with per-chunk children).
+
+    PYTHONPATH=src python -m benchmarks.obs_bench [--quick] [--check] \
+        [--json obs.json] [--trace-out obs.trace.json]
+    PYTHONPATH=src python -m benchmarks.run --only obs
+
+CSV rows (name,us_per_call,derived) per the harness contract.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+from dataclasses import replace
+
+from benchmarks.common import SUITE, make_record, row, time_call, write_bench_json
+from repro.core import StreamConfig, biggraphvis, default_config
+from repro.graph import mode_degree
+from repro.obs.trace import NULL_TRACER, Tracer
+
+# Mirror stream_bench's fixed streaming shape (chunked run, several chunks
+# per pass) so the overhead gate measures the instrumented path the other
+# benches time.
+BLOCK = 2048
+CHUNK = 16384
+
+OVERHEAD_GATE = 1.03  # traced-on / traced-off wall ratio ceiling
+
+# Span names the traced workload must produce, each with at least one
+# per-chunk (or per-call) child underneath.
+REQUIRED_SPANS = ("biggraphvis", "detect", "detect.chunk", "supergraph",
+                  "supergraph.chunk", "layout")
+
+
+def _setup(graph: str, rounds: int):
+    builder, n = SUITE[graph]
+    edges = builder()
+    cfg = default_config(n, len(edges), mode_degree(edges, n),
+                         rounds=rounds, iterations=10)
+    cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=BLOCK))
+    scfg = StreamConfig(chunk_size=CHUNK)
+    return edges, n, cfg, scfg
+
+
+def measure(graph: str = "ppart-8k", rounds: int = 2, repeat: int = 3):
+    """(t_off, t_on, tracer) — best-of-``repeat`` streamed pipeline wall
+    with tracing disabled (explicit null tracer) vs enabled (a private
+    enabled tracer threaded via ``BGVConfig.obs``; the process-global
+    tracer is never touched). The returned tracer holds the spans of the
+    traced runs for export/validation."""
+    edges, n, cfg, scfg = _setup(graph, rounds)
+
+    cfg_off = replace(cfg, obs=NULL_TRACER)
+    t_off = time_call(lambda: biggraphvis(edges, n, cfg_off, stream=scfg),
+                      repeat=repeat)
+
+    tracer = Tracer(enabled=True)
+    cfg_on = replace(cfg, obs=tracer)
+
+    def traced():
+        tracer.clear()  # bound span memory: keep only the last run's tree
+        biggraphvis(edges, n, cfg_on, stream=scfg)
+
+    t_on = time_call(traced, repeat=repeat)
+    return t_off, t_on, tracer
+
+
+def validate_chrome_trace(path: str) -> dict:
+    """Load a Chrome trace-event file and assert the BigGraphVis span tree
+    is present: valid JSON, ``traceEvents`` complete-span records, every
+    ``REQUIRED_SPANS`` name at least once, and the per-chunk child spans
+    under both stream stages. Returns {span name: count}."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = [e for e in doc.get("traceEvents", []) if e.get("ph") == "X"]
+    assert events, f"{path}: no complete ('X') trace events"
+    for e in events:
+        assert {"name", "ts", "dur", "pid", "tid"} <= set(e), e
+    counts: dict = {}
+    for e in events:
+        counts[e["name"]] = counts.get(e["name"], 0) + 1
+    missing = [s for s in REQUIRED_SPANS if s not in counts]
+    assert not missing, f"{path}: missing spans {missing} (have {sorted(counts)})"
+    assert counts["detect.chunk"] >= counts["detect"], counts
+    assert counts["supergraph.chunk"] >= counts["supergraph"], counts
+    return counts
+
+
+def run(quick: bool = False, records: list | None = None,
+        trace_out: str | None = None):
+    repeat = 2 if quick else 3
+    rounds = 2
+    t_off, t_on, tracer = measure(rounds=rounds, repeat=repeat)
+    ratio = t_on / t_off if t_off else float("inf")
+    n_spans = len(tracer.spans())
+    derived = (f"ratio={ratio:.4f};spans={n_spans};"
+               f"traced_off_us={t_off * 1e6:.0f}")
+    yield row("obs_overhead/ppart-8k/off", t_off, "spans=0")
+    yield row("obs_overhead/ppart-8k/on", t_on, derived)
+    if records is not None:
+        records.append(make_record(
+            "obs_overhead/ppart-8k",
+            config={"graph": "ppart-8k", "rounds": rounds,
+                    "chunk_size": CHUNK, "repeat": repeat,
+                    "gate": OVERHEAD_GATE},
+            metrics={"us_per_call": t_on * 1e6,
+                     "traced_off_us": t_off * 1e6,
+                     "overhead_ratio": ratio, "spans": n_spans},
+        ))
+    if trace_out:
+        tracer.to_chrome(trace_out)
+
+
+def check(records: list, trace_out: str) -> list[str]:
+    """The CI gates: tracing-on within ``OVERHEAD_GATE`` of tracing-off,
+    and the exported Chrome trace structurally complete."""
+    assert records, "no records measured"
+    r = records[-1]["metrics"]
+    ratio = r["overhead_ratio"]
+    assert ratio <= OVERHEAD_GATE, (
+        f"tracing overhead {ratio:.4f} exceeds gate {OVERHEAD_GATE}: "
+        f"off={r['traced_off_us']:.0f}us on={r['us_per_call']:.0f}us"
+    )
+    counts = validate_chrome_trace(trace_out)
+    return [
+        f"check: tracing-on/off ratio {ratio:.4f} <= {OVERHEAD_GATE} "
+        f"(off {r['traced_off_us'] / 1e3:.1f}ms, "
+        f"on {r['us_per_call'] / 1e3:.1f}ms)",
+        f"check: Chrome trace valid — {sum(counts.values())} spans, "
+        f"all of {', '.join(REQUIRED_SPANS)} present with per-chunk "
+        "children",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="fewer repeats")
+    ap.add_argument("--json", default="",
+                    help="write unified structured records to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="keep the traced run's Chrome trace at this path")
+    ap.add_argument("--check", action="store_true",
+                    help="gate overhead <= 3% and validate the trace export")
+    args = ap.parse_args()
+
+    records: list = []
+    tmp = None
+    trace_out = args.trace_out
+    if not trace_out:
+        tmp = tempfile.NamedTemporaryFile(
+            suffix=".trace.json", delete=False)
+        trace_out = tmp.name
+        tmp.close()
+    try:
+        print("name,us_per_call,derived")
+        for line in run(quick=args.quick, records=records,
+                        trace_out=trace_out):
+            print(line)
+        if args.json:
+            import time as _time
+
+            write_bench_json(args.json, "obs_bench", records,
+                             timestamp=_time.time())
+            print(f"wrote {args.json} ({len(records)} records)")
+        if args.check:
+            from benchmarks.run import step_summary
+
+            lines = check(records, trace_out)
+            print("\n".join(lines))
+            step_summary("obs_bench", lines)
+    finally:
+        if tmp is not None:
+            os.unlink(trace_out)
+
+
+if __name__ == "__main__":
+    main()

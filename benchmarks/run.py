@@ -1,7 +1,9 @@
 """Benchmark harness entry point — one module per paper table/figure plus
 the engine benches and the roofline summary. Prints
-``name,us_per_call,derived`` CSV; ``--list`` prints the registry with each
-bench's one-line description.
+``name,us_per_call,derived`` CSV and writes each module's rows as unified
+structured records (benchmarks/common.py schema) to repo-root
+``BENCH_<name>.json``; ``--list`` prints the registry with each bench's
+one-line description.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--list] [--only fa2,agg]
 """
@@ -10,7 +12,10 @@ from __future__ import annotations
 import argparse
 import os
 import sys
+import time
 import traceback
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def step_summary(bench: str, lines: list[str]) -> None:
@@ -36,12 +41,15 @@ def main() -> None:
     ap.add_argument("--list", action="store_true",
                     help="print the bench registry (name + one-line "
                          "description) and exit")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing repo-root BENCH_<name>.json records")
     args = ap.parse_args()
 
     from benchmarks import (agg_bench, fa2_bench, fig_params, kernels_bench,
-                            quality_bench, render_bench, roofline,
+                            obs_bench, quality_bench, render_bench, roofline,
                             serve_bench, shard_bench, stream_bench,
                             table1_speedup, table2_hashes, table3_rounds)
+    from benchmarks.common import record_from_csv, write_bench_json
 
     modules = {
         "table1": table1_speedup,
@@ -56,6 +64,7 @@ def main() -> None:
         "fa2": fa2_bench,
         "quality": quality_bench,
         "shard": shard_bench,
+        "obs": obs_bench,
         "roofline": roofline,
     }
     if args.list:
@@ -72,12 +81,23 @@ def main() -> None:
     failures = 0
     for name, mod in modules.items():
         try:
+            lines = []
             for line in mod.run(quick=args.quick):
                 print(line)
+                lines.append(line)
         except Exception:
             failures += 1
             print(f"{name},0,ERROR", file=sys.stderr)
             traceback.print_exc()
+            continue
+        if not args.no_json:
+            records = [r for r in map(record_from_csv, lines) if r]
+            if records:
+                path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+                write_bench_json(path, name, records, timestamp=time.time(),
+                                 quick=args.quick)
+                print(f"wrote {path} ({len(records)} records)",
+                      file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

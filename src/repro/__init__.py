@@ -13,6 +13,8 @@ modules so user code never needs deep imports:
 * rendering — ``render`` / ``render_arrays`` / ``RenderConfig``
 * serving — ``TileEngine`` / ``TilePyramid`` / ``TileConfig`` /
   ``TileSpec`` / ``DrillSpec`` (repro/serve/tiles.py)
+* observability — ``Tracer`` / ``MetricsRegistry`` / ``enable_tracing``
+  / ``get_tracer`` / ``jit_compile_count`` (repro/obs)
 
 Imports are lazy (PEP 562), so ``import repro`` stays cheap and CLI
 modules (``python -m repro.data.edge_store`` …) don't pay for the full
@@ -26,6 +28,7 @@ _EXPORTS = {
     "BGVResult": "repro.core.pipeline",
     "DrillSpec": "repro.serve.tiles",
     "EdgeStore": "repro.data.edge_store",
+    "MetricsRegistry": "repro.obs",
     "RenderConfig": "repro.render",
     "StreamConfig": "repro.core.stream",
     "StreamStats": "repro.core.stream",
@@ -33,10 +36,14 @@ _EXPORTS = {
     "TileEngine": "repro.serve.tiles",
     "TilePyramid": "repro.serve.tiles",
     "TileSpec": "repro.serve.tiles",
+    "Tracer": "repro.obs",
     "as_edge_store": "repro.data.edge_store",
     "biggraphvis": "repro.core.pipeline",
     "default_config": "repro.core.pipeline",
+    "enable_tracing": "repro.obs",
     "full_layout_colored": "repro.core.pipeline",
+    "get_tracer": "repro.obs",
+    "jit_compile_count": "repro.obs",
     "render": "repro.render",
     "render_arrays": "repro.render",
 }

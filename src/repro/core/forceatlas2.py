@@ -402,9 +402,17 @@ def layout(
     ``iterations_run`` reports the live count (it is ``cfg.iterations``
     exactly when the tolerance never triggered or adaptivity is off).
     """
-    if pos0 is None:
-        pos0 = _initial_positions_jit(edges, mass, n, cfg)
-    return _layout_jit(edges, weights, mass, n, cfg, pos0)
+    from repro.obs.trace import get_tracer
+
+    # Host-side span: brackets init + dispatch of the jitted scan (compile
+    # time on first call). Never forces a device sync.
+    with get_tracer().span(
+        "fa2.layout", n=n, iterations=cfg.iterations,
+        repulsion=cfg.repulsion, adaptive=cfg.stop_tolerance > 0.0,
+    ):
+        if pos0 is None:
+            pos0 = _initial_positions_jit(edges, mass, n, cfg)
+        return _layout_jit(edges, weights, mass, n, cfg, pos0)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
@@ -697,10 +705,16 @@ def layout_sharded(
     if reason is not None:
         _warn_fallback(reason)
         return layout(edges, weights, mass, n, cfg, pos0)
-    dtype = jnp.dtype(cfg.dtype)
-    pos = (
-        _initial_positions_jit(edges, mass, n, cfg)
-        if pos0 is None
-        else pos0.astype(dtype)
-    )
-    return _sharded_layout_fn(mesh, cfg, n)(edges, weights, mass, pos)
+    from repro.obs.trace import get_tracer
+
+    with get_tracer().span(
+        "fa2.layout_sharded", n=n, iterations=cfg.iterations,
+        repulsion=cfg.repulsion, devices=mesh.size,
+    ):
+        dtype = jnp.dtype(cfg.dtype)
+        pos = (
+            _initial_positions_jit(edges, mass, n, cfg)
+            if pos0 is None
+            else pos0.astype(dtype)
+        )
+        return _sharded_layout_fn(mesh, cfg, n)(edges, weights, mass, pos)

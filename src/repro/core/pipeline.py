@@ -34,6 +34,8 @@ from repro.core.scoda import ScodaConfig, detect_communities
 from repro.core.stream import StreamConfig, StreamStats, stream_pipeline
 from repro.core.supergraph import Supergraph, build_supergraph
 from repro.graph.utils import degrees, pad_edges
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
 
 
 @dataclass(frozen=True)
@@ -43,6 +45,10 @@ class BGVConfig:
     layout: fa2.FA2Config
     s_cap: int = 65536  # supernode capacity
     max_super_edges: int = 262144
+    # Optional repro.obs.Tracer for the whole pipeline (detect → supergraph
+    # → layout → render). None falls back to StreamConfig.obs, then the
+    # process-global tracer (repro.obs.get_tracer) — disabled by default.
+    obs: object = None
 
 
 @dataclass
@@ -57,6 +63,7 @@ class BGVResult:
     n_superedges: int
     timings: dict = field(default_factory=dict)
     stream: StreamStats | None = None  # chunked-engine accounting
+    obs: object = field(default=None, repr=False)  # Tracer from the run
 
     def render(self, path: str | None = None, cfg=None):
         """Rasterize this result's supergraph drawing (paper §4.3) through
@@ -70,10 +77,23 @@ class BGVResult:
         ``timings["render_s"]``.
         """
         # Local import: repro.render consumes this module's BGVResult.
+        import dataclasses
+
         from repro.render import render as render_result
 
+        tr = self.obs if self.obs is not None else get_tracer()
+        if self.obs is not None:
+            # Thread the run's explicit tracer into the render config so the
+            # raster spans nest under this render span.
+            from repro.render import RenderConfig
+
+            if cfg is None:
+                cfg = RenderConfig(obs=tr)
+            elif getattr(cfg, "obs", None) is None:
+                cfg = dataclasses.replace(cfg, obs=tr)
         t0 = time.perf_counter()
-        out = render_result(self, path, cfg=cfg)
+        with tr.span("render", path=path or ""):
+            out = render_result(self, path, cfg=cfg)
         self.timings["render_s"] = time.perf_counter() - t0
         return out
 
@@ -159,7 +179,8 @@ def _block(fn, *args):
 
 
 def layout_supergraph(
-    sg: Supergraph, cfg: BGVConfig, mesh=None, shard_layout: bool = False
+    sg: Supergraph, cfg: BGVConfig, mesh=None, shard_layout: bool = False,
+    tracer=None,
 ) -> tuple[jnp.ndarray, int]:
     """ForceAtlas2 on the (small, device-resident) supergraph.
 
@@ -177,6 +198,7 @@ def layout_supergraph(
     fallbacks). ``s_layout`` is a power of two ≥ 64, so it divides by any
     power-of-two device count.
     """
+    tr = tracer if tracer is not None else get_tracer()
     s_live = max(int(sg.n_supernodes), 2)
     s_layout = 1 << (s_live - 1).bit_length()
     s_layout = min(max(s_layout, 64), cfg.s_cap)
@@ -193,7 +215,13 @@ def layout_supergraph(
     else:
         def run(e, w, m):
             return fa2.layout(e, w, m, s_layout, cfg.layout)
-    pos_live, _trace, iters_run = _block(run, sedges, sg.weights[:e_layout], mass)
+    with tr.span(
+        "layout.supergraph", n=s_layout, edges=e_layout,
+        sharded=bool(mesh is not None and shard_layout),
+    ):
+        pos_live, _trace, iters_run = _block(
+            run, sedges, sg.weights[:e_layout], mass
+        )
     pos = jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
     return pos, int(iters_run)
 
@@ -226,25 +254,41 @@ def biggraphvis(
     ``DeprecationWarning`` per process) forwarding to the render entry
     point, ``BGVResult.render(path, cfg=...)`` — call that instead.
     """
-    labels, _gdeg, sg, q, stats = stream_pipeline(
-        source, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap, cfg.max_super_edges,
-        stream, put=put,
-    )
-    t = {
-        "scoda_s": stats.stage_seconds["detect_s"],
-        "supergraph_s": stats.stage_seconds["supergraph_s"],
-    }
+    tr = cfg.obs
+    if tr is None and stream is not None:
+        tr = stream.obs
+    if tr is None:
+        tr = get_tracer()
+    with tr.span("biggraphvis", n_nodes=n_nodes, s_cap=cfg.s_cap):
+        labels, _gdeg, sg, q, stats = stream_pipeline(
+            source, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap,
+            cfg.max_super_edges,
+            stream, put=put, tracer=tr,
+        )
+        t = {
+            "scoda_s": stats.stage_seconds["detect_s"],
+            "supergraph_s": stats.stage_seconds["supergraph_s"],
+        }
 
-    t0 = time.perf_counter()
-    pos, layout_iters = layout_supergraph(
-        sg, cfg,
-        mesh=stream.mesh if stream is not None else None,
-        shard_layout=stream.shard_layout if stream is not None else False,
-    )
-    t["layout_s"] = time.perf_counter() - t0
-    t["layout_iterations"] = layout_iters
+        t0 = time.perf_counter()
+        with tr.span("layout", iterations=cfg.layout.iterations,
+                     repulsion=cfg.layout.repulsion):
+            pos, layout_iters = layout_supergraph(
+                sg, cfg,
+                mesh=stream.mesh if stream is not None else None,
+                shard_layout=stream.shard_layout if stream is not None else False,
+                tracer=tr,
+            )
+        t["layout_s"] = time.perf_counter() - t0
+        t["layout_iterations"] = layout_iters
+        REGISTRY.counter("layout.runs").inc()
+        REGISTRY.gauge("layout.iterations_run").set(layout_iters)
+        REGISTRY.gauge("layout.seconds").set(t["layout_s"])
+        REGISTRY.gauge("layout.converged").set(
+            int(layout_iters < cfg.layout.iterations)
+        )
 
-    groups = color_groups(sg.sizes)
+        groups = color_groups(sg.sizes)
     result = BGVResult(
         positions=np.asarray(pos),
         sizes=np.asarray(sg.sizes),
@@ -256,6 +300,10 @@ def biggraphvis(
         n_superedges=int(sg.n_superedges),
         timings=t,
         stream=stats,
+        # Only carry an *explicit* tracer; global-tracer users keep the
+        # late-binding get_tracer() fallback in .render().
+        obs=cfg.obs if cfg.obs is not None
+        else (stream.obs if stream is not None else None),
     )
     if render_path is not None or render_cfg is not None:
         _warn_render_kwargs()
@@ -324,6 +372,9 @@ def full_layout_colored(
     )
     mass = deg.astype(jnp.float32) + 1.0
     w = jnp.ones(edges.shape[0], jnp.float32)
-    pos, _, _ = fa2.layout(edges, w, mass, n_nodes, lcfg)
+    tr = cfg.obs if cfg.obs is not None else get_tracer()
+    with tr.span("layout.full", n=n_nodes, repulsion=repulsion):
+        pos, _, iters_run = fa2.layout(edges, w, mass, n_nodes, lcfg)
+    REGISTRY.gauge("layout.full_iterations_run").set(int(iters_run))
     node_groups = color_groups(sg.sizes)[jnp.clip(sg.labels, 0, cfg.s_cap - 1)]
     return np.asarray(pos), np.asarray(node_groups)

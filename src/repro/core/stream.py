@@ -73,6 +73,8 @@ from repro.core.supergraph import (
 )
 from repro.data.edge_store import EDGE_DTYPE, InMemoryEdgeStore, as_edge_store
 from repro.kernels.compat import device_put_copied, shard_map_compat
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
 
 
 @dataclass(frozen=True)
@@ -94,7 +96,11 @@ class StreamConfig:
     downstream FA2 layout (core/pipeline.py) to node-partition its force
     pass on the same mesh. Both degrade to the unsharded path when a shape
     doesn't divide by the device count (see ``stream_detect`` /
-    ``stream_supergraph`` gates)."""
+    ``stream_supergraph`` gates).
+
+    ``obs`` threads a ``repro.obs.Tracer`` through every engine stage
+    (per-pass/per-chunk spans); None falls back to the process-global
+    tracer, a no-op until ``repro.obs.enable_tracing()``."""
 
     chunk_size: int = 1 << 16  # edges resident on device per chunk
     prefetch: int = 1  # host→device copies dispatched ahead of compute
@@ -103,6 +109,7 @@ class StreamConfig:
     mesh: object = None  # jax.sharding.Mesh for the sharded paths (or None)
     shard_detect: bool = False  # shard the per-chunk edge passes over mesh
     shard_layout: bool = False  # node-partition the FA2 layout over mesh
+    obs: object = None  # repro.obs.Tracer (None = process-global tracer)
 
 
 @dataclass
@@ -149,6 +156,36 @@ class StreamStats:
     @property
     def edges_per_s(self) -> float:
         return self.edges_streamed / self.seconds if self.seconds > 0 else 0.0
+
+    def publish(self, registry=None) -> None:
+        """Mirror this run's accounting into the metrics registry
+        (``repro.obs.REGISTRY`` by default) — the engine's side of the
+        one-instrumentation-layer contract: counters accumulate across
+        runs, per-run seconds land as gauges, residency peaks as
+        high-watermark gauges. ``launch/render_runner.py`` and the
+        ``--metrics-out`` CLI dumps read these instead of hand-formatting
+        the dataclass fields."""
+        reg = registry if registry is not None else REGISTRY
+        reg.counter("stream.runs").inc()
+        reg.counter("stream.passes").inc(self.passes)
+        reg.counter("stream.chunks").inc(self.chunks)
+        reg.counter("stream.edges").inc(self.edges_streamed)
+        for name, value in (
+            ("stream.seconds", self.seconds),
+            ("stream.edges_per_s", self.edges_per_s),
+            ("stream.chunk_size", self.chunk_size),
+            ("stream.devices", self.devices),
+            ("stream.host_fill_s", self.host_fill_s),
+            ("stream.copy_stall_s", self.copy_stall_s),
+            ("stream.agg_update_s", self.agg_update_s),
+            ("stream.raster_update_s", self.raster_update_s),
+        ):
+            reg.gauge(name).set(value)
+        for stage, secs in self.stage_seconds.items():
+            reg.gauge(f"stream.stage.{stage}").set(secs)
+        reg.gauge("stream.peak_device_bytes").set_max(self.peak_device_bytes)
+        reg.gauge("stream.peak_local_bytes").set_max(self.peak_local_bytes)
+        reg.gauge("stream.peak_host_bytes").set_max(self.peak_host_bytes)
 
 
 def tree_bytes(*trees) -> int:
@@ -435,6 +472,7 @@ def stream_detect(
     stats: StreamStats | None = None,
     mesh=None,
     shard: bool = False,
+    tracer=None,
 ):
     """Multi-round SCoDA over the chunk stream; graph degrees are fused into
     the first pass. Returns (labels [n], scoda_deg [n], graph_deg [n]).
@@ -443,8 +481,11 @@ def stream_detect(
     (bit-identical — core/scoda.py); the engine then owns chunk placement
     (the detect pass needs ``block_chunk_spec``, so any caller ``put`` is
     superseded). Falls back to the unsharded path unless ``block_size`` and
-    the chunk size divide by the device count.
+    the chunk size divide by the device count. ``tracer`` emits the
+    ``detect``/``detect.round``/``detect.chunk`` span tree (None =
+    process-global tracer).
     """
+    tr = tracer if tracer is not None else get_tracer()
     m = _effective_mesh(mesh, shard, cfg.block_size, stream.chunk_size)
     if m is not None and stream.chunk_size % cfg.block_size != 0:
         m = None  # chunk must hold whole blocks to reshape [B, bs, 2]
@@ -456,18 +497,26 @@ def stream_detect(
         upd, deg_upd = None, _degree_update
     state = scoda_init(n_nodes)
     gdeg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
-    for r in range(cfg.rounds):
-        thr = jnp.int32(round_threshold(cfg, r))
-        for chunk in stream.device_chunks(put, prefetch, stats):
-            if r == 0:
-                gdeg = deg_upd(gdeg, chunk)
-            if m is not None:
-                state = upd(state, chunk, thr)
-            else:
-                state = scoda_update(state, chunk, thr, cfg)
-            if stats is not None:
-                stats.chunks += 1
-                stats.edges_streamed += _chunk_edges(chunk)
+    with tr.span(
+        "detect", rounds=cfg.rounds, chunk_size=stream.chunk_size,
+        devices=m.size if m is not None else 1,
+    ):
+        for r in range(cfg.rounds):
+            thr = jnp.int32(round_threshold(cfg, r))
+            with tr.span("detect.round", round=r):
+                for i, chunk in enumerate(
+                    stream.device_chunks(put, prefetch, stats)
+                ):
+                    with tr.span("detect.chunk", round=r, chunk=i):
+                        if r == 0:
+                            gdeg = deg_upd(gdeg, chunk)
+                        if m is not None:
+                            state = upd(state, chunk, thr)
+                        else:
+                            state = scoda_update(state, chunk, thr, cfg)
+                    if stats is not None:
+                        stats.chunks += 1
+                        stats.edges_streamed += _chunk_edges(chunk)
     if stats is not None:
         stats.passes += cfg.rounds
         _account_pass_peaks(
@@ -495,6 +544,7 @@ def stream_supergraph(
     time_agg: bool = False,
     mesh=None,
     shard: bool = False,
+    tracer=None,
 ):
     """One fused pass: superedge aggregation + modularity accumulation.
 
@@ -509,40 +559,47 @@ def stream_supergraph(
     row-sharded by the engine. Falls back to unsharded when the chunk size
     doesn't divide by the device count.
     """
+    tr = tracer if tracer is not None else get_tracer()
     m = _effective_mesh(mesh, shard, stream.chunk_size)
-    labels_dense, n_supernodes = dense_labels(labels, n_nodes)
-    sizes = community_sizes(
-        labels_dense, node_deg, n_supernodes, s_cap, cms_cfg, mesh=m
-    )
+    with tr.span(
+        "supergraph", chunk_size=stream.chunk_size, s_cap=s_cap,
+        agg_backend=agg_backend, devices=m.size if m is not None else 1,
+    ):
+        labels_dense, n_supernodes = dense_labels(labels, n_nodes)
+        with tr.span("supergraph.sizes"):
+            sizes = community_sizes(
+                labels_dense, node_deg, n_supernodes, s_cap, cms_cfg, mesh=m
+            )
 
-    if m is not None:
-        put = _row_put(m)
-        one_agg = sharded_agg_update(m, s_cap, max_super_edges, agg_backend)
-        mod_upd = sharded_modularity_update(m) if with_modularity else None
-    else:
-        def one_agg(st, chunk, ext):
-            return agg_update(st, chunk, ext, s_cap, max_super_edges, agg_backend)
-
-        mod_upd = modularity_update
-
-    agg_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
-    mod_ext = jnp.concatenate([labels_dense, jnp.array([-1], jnp.int32)])
-    agg = agg_init(s_cap, max_super_edges)
-    mod = modularity_init(n_nodes) if with_modularity else None
-    for chunk in stream.device_chunks(put, prefetch, stats):
-        if time_agg and stats is not None:
-            t0 = time.perf_counter()
-            agg = one_agg(agg, chunk, agg_ext)
-            jax.block_until_ready(agg)
-            stats.agg_update_s += time.perf_counter() - t0
-            stats.agg_chunks += 1
+        if m is not None:
+            put = _row_put(m)
+            one_agg = sharded_agg_update(m, s_cap, max_super_edges, agg_backend)
+            mod_upd = sharded_modularity_update(m) if with_modularity else None
         else:
-            agg = one_agg(agg, chunk, agg_ext)
-        if with_modularity:
-            mod = mod_upd(mod, chunk, mod_ext)
-        if stats is not None:
-            stats.chunks += 1
-            stats.edges_streamed += _chunk_edges(chunk)
+            def one_agg(st, chunk, ext):
+                return agg_update(st, chunk, ext, s_cap, max_super_edges, agg_backend)
+
+            mod_upd = modularity_update
+
+        agg_ext = jnp.concatenate([labels_dense, jnp.array([s_cap], jnp.int32)])
+        mod_ext = jnp.concatenate([labels_dense, jnp.array([-1], jnp.int32)])
+        agg = agg_init(s_cap, max_super_edges)
+        mod = modularity_init(n_nodes) if with_modularity else None
+        for i, chunk in enumerate(stream.device_chunks(put, prefetch, stats)):
+            with tr.span("supergraph.chunk", chunk=i):
+                if time_agg and stats is not None:
+                    t0 = time.perf_counter()
+                    agg = one_agg(agg, chunk, agg_ext)
+                    jax.block_until_ready(agg)
+                    stats.agg_update_s += time.perf_counter() - t0
+                    stats.agg_chunks += 1
+                else:
+                    agg = one_agg(agg, chunk, agg_ext)
+                if with_modularity:
+                    mod = mod_upd(mod, chunk, mod_ext)
+            if stats is not None:
+                stats.chunks += 1
+                stats.edges_streamed += _chunk_edges(chunk)
     if stats is not None:
         stats.passes += 1
         _account_pass_peaks(
@@ -573,6 +630,7 @@ def stream_pipeline(
     *,
     put=None,
     with_modularity: bool = True,
+    tracer=None,
 ):
     """Edge source → (labels, graph degrees, Supergraph, Q, StreamStats).
 
@@ -584,29 +642,37 @@ def stream_pipeline(
     """
     store = as_edge_store(source)
     cfg = stream_cfg or StreamConfig(chunk_size=max(1, store.n_edges))
+    tr = tracer if tracer is not None else (
+        cfg.obs if cfg.obs is not None else get_tracer()
+    )
     stream = EdgeChunkStream(
         store, n_nodes, cfg.chunk_size, block_size=scoda_cfg.block_size
     )
     stats = StreamStats(chunk_size=stream.chunk_size)
-    t0 = time.perf_counter()
-    labels, _scoda_deg, gdeg = stream_detect(
-        stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch,
-        stats=stats, mesh=cfg.mesh, shard=cfg.shard_detect,
-    )
-    jax.block_until_ready(labels)
-    stats.stage_seconds["detect_s"] = time.perf_counter() - t0
+    with tr.span(
+        "stream_pipeline", n_nodes=n_nodes, n_edges=store.n_edges,
+        chunk_size=stream.chunk_size,
+    ):
+        t0 = time.perf_counter()
+        labels, _scoda_deg, gdeg = stream_detect(
+            stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch,
+            stats=stats, mesh=cfg.mesh, shard=cfg.shard_detect, tracer=tr,
+        )
+        jax.block_until_ready(labels)
+        stats.stage_seconds["detect_s"] = time.perf_counter() - t0
 
-    t0 = time.perf_counter()
-    sg, q = stream_supergraph(
-        stream, labels, gdeg, n_nodes, s_cap, max_super_edges, cms_cfg,
-        put=put, prefetch=cfg.prefetch, stats=stats,
-        with_modularity=with_modularity,
-        agg_backend=cfg.agg_backend, time_agg=cfg.time_agg,
-        mesh=cfg.mesh, shard=cfg.shard_detect,
-    )
-    jax.block_until_ready(sg.edges)
-    stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        sg, q = stream_supergraph(
+            stream, labels, gdeg, n_nodes, s_cap, max_super_edges, cms_cfg,
+            put=put, prefetch=cfg.prefetch, stats=stats,
+            with_modularity=with_modularity,
+            agg_backend=cfg.agg_backend, time_agg=cfg.time_agg,
+            mesh=cfg.mesh, shard=cfg.shard_detect, tracer=tr,
+        )
+        jax.block_until_ready(sg.edges)
+        stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0
     stats.seconds = sum(stats.stage_seconds.values())
+    stats.publish()
     return labels, gdeg, sg, q, stats
 
 

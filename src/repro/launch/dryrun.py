@@ -128,8 +128,16 @@ def main() -> None:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    from repro.obs.cli import add_obs_args, obs_session
+
+    add_obs_args(ap)
     args = ap.parse_args()
 
+    with obs_session(args):
+        _run(args)
+
+
+def _run(args) -> None:
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     cells = []
     if args.all:

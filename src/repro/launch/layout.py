@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core import biggraphvis, default_config, write_svg
 from repro.graph import mode_degree, planted_partition
+from repro.obs.cli import add_obs_args, obs_session
 
 
 def load_edges(spec: str) -> tuple[np.ndarray, int]:
@@ -70,8 +71,14 @@ def main() -> None:
                     choices=("random", "degree", "bfs"),
                     help="FA2 initial positions: uniform random, degree-"
                          "ranked sunflower spiral, or BFS hop-distance rings")
+    add_obs_args(ap)
     args = ap.parse_args()
 
+    with obs_session(args):
+        _run(args)
+
+
+def _run(args) -> None:
     edges, n = load_edges(args.edges)
     delta = args.threshold or mode_degree(edges, n)
     print(f"graph: {n} nodes, {len(edges)} edges, δ={delta}", file=sys.stderr)

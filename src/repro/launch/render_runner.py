@@ -27,25 +27,33 @@ import numpy as np
 
 from repro.core.pipeline import biggraphvis, default_config, full_layout_colored
 from repro.data.edge_store import open_edge_store
-from repro.render import RenderConfig, render, render_arrays, write_png
+from repro.obs.cli import add_obs_args, obs_session
+from repro.obs.metrics import REGISTRY
+from repro.render import RenderConfig, render_arrays, write_png
 
 
 def _report(stats) -> None:
+    """Timing report read from the metrics registry (the render stage
+    publishes its ``render.*`` gauges there — one source of truth for the
+    printout, ``--metrics-out``, and CI step summaries); only identity
+    fields (sizes/counts) still come from the stats object."""
+    v = REGISTRY.value
     print(
         f"render: {stats.width}x{stats.height} (ss={stats.supersample}) "
         f"nodes={stats.nodes_drawn} edge_rows={stats.edges_streamed} "
         f"chunks={stats.chunks}"
     )
     print(
-        f"timings: node_raster={stats.node_raster_s * 1e3:.1f}ms "
-        f"edge_raster={stats.edge_raster_s * 1e3:.1f}ms "
-        f"compose={stats.compose_s * 1e3:.1f}ms total={stats.seconds * 1e3:.1f}ms"
+        f"timings: node_raster={v('render.node_raster_s') * 1e3:.1f}ms "
+        f"edge_raster={v('render.edge_raster_s') * 1e3:.1f}ms "
+        f"compose={v('render.compose_s') * 1e3:.1f}ms "
+        f"total={v('render.seconds') * 1e3:.1f}ms"
     )
     print(
-        f"throughput: {stats.edges_per_s / 1e6:.2f}M edges/s, "
-        f"{stats.mpixels_per_s:.1f} Mpixels/s"
+        f"throughput: {v('render.edges_per_s') / 1e6:.2f}M edges/s, "
+        f"{v('render.mpixels_per_s'):.1f} Mpixels/s"
     )
-    print(f"peak device bytes (render): {stats.peak_device_bytes:,}")
+    print(f"peak device bytes (render): {int(v('render.peak_device_bytes')):,}")
     if stats.stream is not None:
         s = stats.stream
         print(
@@ -80,8 +88,14 @@ def main() -> None:
     ap.add_argument("--iterations", type=int, default=60)
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--seed", type=int, default=5)
+    add_obs_args(ap)
     args = ap.parse_args()
 
+    with obs_session(args):
+        _run(args)
+
+
+def _run(args) -> None:
     from repro.graph import mode_degree, planted_partition
 
     n = args.nodes
@@ -119,7 +133,7 @@ def main() -> None:
             f"BigGraphVis: {res.n_supernodes} supernodes, "
             f"{res.n_superedges} superedges, Q={res.modularity:.3f}"
         )
-        _image, stats = render(res, args.out, cfg=rcfg)
+        _image, stats = res.render(args.out, cfg=rcfg)
     print(f"wrote {args.out}")
     _report(stats)
 

@@ -25,6 +25,7 @@ import time
 import numpy as np
 
 from repro.kernels.compat import enable_persistent_compilation_cache
+from repro.obs.cli import add_obs_args, obs_session
 
 
 def percentile(values, q: float) -> float:
@@ -63,8 +64,14 @@ def main() -> None:
                     help="persistent XLA compilation cache directory")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="skip persistent compilation caching")
+    add_obs_args(ap)
     args = ap.parse_args()
 
+    with obs_session(args):
+        _run(args)
+
+
+def _run(args) -> None:
     # Before any compilation: a warm cache turns the service's cold-start
     # compiles into deserialization.
     cache_on = False

@@ -35,6 +35,7 @@ from repro.core.pipeline import BGVConfig, BGVResult, biggraphvis
 from repro.core.stream import StreamConfig, oneshot_device_bytes
 from repro.data.edge_store import write_bin, write_npy, write_shards
 from repro.kernels.compat import device_put_copied
+from repro.obs.cli import add_obs_args, obs_session
 
 
 @dataclass(frozen=True)
@@ -163,8 +164,14 @@ def main() -> None:
                          "(both bit-identical), 'all' does everything "
                          "(on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    add_obs_args(ap)
     args = ap.parse_args()
 
+    with obs_session(args):
+        _run(args)
+
+
+def _run(args) -> None:
     from repro.core.pipeline import default_config
     from repro.graph import mode_degree, planted_partition
 

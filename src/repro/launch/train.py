@@ -111,14 +111,18 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--state-bits", type=int, default=32, choices=[8, 32])
+    from repro.obs.cli import add_obs_args, obs_session
+
+    add_obs_args(ap)
     args = ap.parse_args()
     if args.preset == "full":
         raise SystemExit(
             "--preset full lowers the assigned config and requires a TPU pod; "
             "use launch/dryrun.py for the compile-only proof on CPU."
         )
-    run(args.arch, args.steps, args.batch, args.seq, args.ckpt_dir,
-        args.ckpt_every, args.lr, state_bits=args.state_bits)
+    with obs_session(args):
+        run(args.arch, args.steps, args.batch, args.seq, args.ckpt_dir,
+            args.ckpt_every, args.lr, state_bits=args.state_bits)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,68 @@
+"""Shared CLI plumbing: every ``repro.launch`` driver grows the same three
+observability flags through ``add_obs_args`` + ``obs_session``::
+
+    add_obs_args(parser)
+    ...
+    with obs_session(args):
+        <existing driver body>
+
+* ``--trace-out PATH``  — enable the process-global tracer for the run and
+  write the Chrome trace-event (Perfetto-loadable) span file at exit
+  (``PATH.jsonl`` alongside it with ``--trace-jsonl``).
+* ``--metrics-out PATH`` — write the plain-text metrics dump (the
+  ``$GITHUB_STEP_SUMMARY`` format) at exit, after refreshing the memory
+  gauges and the compile counter.
+* ``--profile DIR``     — capture a ``jax.profiler`` XLA trace of the whole
+  run into DIR (no-op where the profiler is unavailable).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.obs.meters import (
+    jit_compile_count,
+    profile_trace,
+    update_memory_gauges,
+)
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import enable_tracing, get_tracer
+
+
+def add_obs_args(ap) -> None:
+    g = ap.add_argument_group("observability (repro.obs)")
+    g.add_argument("--trace-out", default="",
+                   help="write a Chrome-trace/Perfetto span file of the run")
+    g.add_argument("--trace-jsonl", action="store_true",
+                   help="also write <trace-out>.jsonl (one span per line)")
+    g.add_argument("--metrics-out", default="",
+                   help="write the plain-text metrics registry dump")
+    g.add_argument("--profile", default="",
+                   help="capture a jax.profiler XLA trace into this dir")
+
+
+@contextlib.contextmanager
+def obs_session(args):
+    """Run the enclosed driver body under the requested instrumentation
+    and write the artifacts on the way out. Yields the active tracer."""
+    if args.trace_out or args.metrics_out:
+        jit_compile_count()  # start the compile meter before any compiles
+    tracer = enable_tracing() if args.trace_out else get_tracer()
+    try:
+        with profile_trace(args.profile or None):
+            yield tracer
+    finally:
+        if args.metrics_out or args.trace_out:
+            update_memory_gauges()
+        if args.trace_out:
+            tracer.to_chrome(args.trace_out)
+            print(f"obs: wrote {args.trace_out} "
+                  f"({len(tracer.spans())} spans)")
+            if args.trace_jsonl:
+                print(f"obs: wrote {tracer.to_jsonl(args.trace_out + '.jsonl')}")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(REGISTRY.dump_text() + "\n")
+            print(f"obs: wrote {args.metrics_out} "
+                  f"({len(REGISTRY.names())} metrics)")
+        if args.profile:
+            print(f"obs: wrote jax profiler trace under {args.profile}")

@@ -37,6 +37,8 @@ from repro.core.coloring import PALETTE
 from repro.core.stream import EdgeChunkStream, StreamStats, tree_bytes
 from repro.data.edge_store import as_edge_store
 from repro.kernels.raster import ops as raster_ops
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
 
 _INT32_MAX = np.iinfo(np.int32).max
 _MAX_INC = 1 << 20  # per-sample increment clamp (keeps counts far from 2³¹)
@@ -85,6 +87,10 @@ class RenderConfig:
     min_radius_px: float = 1.0  # node radius floor, in output pixels
     max_radius_frac: float = 0.125  # radius cap as a fraction of min(H, W)
     time_raster: bool = False
+    # Optional repro.obs.Tracer for the render spans (render.nodes /
+    # render.edges / render.compose); None falls back to the
+    # process-global tracer — disabled (no-op) by default.
+    obs: object = None
 
 
 @dataclass
@@ -118,6 +124,24 @@ class RenderStats:
     def mpixels_per_s(self) -> float:
         px = self.width * self.height * self.supersample**2
         return px / self.seconds / 1e6 if self.seconds else 0.0
+
+    def publish(self, registry=None) -> None:
+        """Mirror this render's accounting into the metrics registry
+        (``render.*`` — README "Observability" glossary). Gauges hold the
+        last render; counters/watermarks accumulate across renders."""
+        reg = registry if registry is not None else REGISTRY
+        reg.counter("render.renders").inc()
+        reg.counter("render.edges").inc(self.edges_streamed)
+        for name, value in (
+            ("render.node_raster_s", self.node_raster_s),
+            ("render.edge_raster_s", self.edge_raster_s),
+            ("render.compose_s", self.compose_s),
+            ("render.seconds", self.seconds),
+            ("render.edges_per_s", self.edges_per_s),
+            ("render.mpixels_per_s", self.mpixels_per_s),
+        ):
+            reg.gauge(name).set(value)
+        reg.gauge("render.peak_device_bytes").set_max(self.peak_device_bytes)
 
 
 def _fit_transform(pos: np.ndarray, ws: int, hs: int, margin: float):
@@ -369,14 +393,16 @@ def render_arrays(
         0.0,
     ).astype(np.float32)
 
+    tr = cfg.obs if cfg.obs is not None else get_tracer()
     node_acc = None
     if cfg.draw_nodes and alive.any():
         t0 = time.perf_counter()
-        node_acc = _node_pass(
-            px.astype(np.float32), py.astype(np.float32), r_px, groups,
-            n_groups, hs, ws, cfg.backend,
-        )
-        jax.block_until_ready(node_acc)
+        with tr.span("render.nodes", n=n, hs=hs, ws=ws):
+            node_acc = _node_pass(
+                px.astype(np.float32), py.astype(np.float32), r_px, groups,
+                n_groups, hs, ws, cfg.backend,
+            )
+            jax.block_until_ready(node_acc)
         stats.node_raster_s = time.perf_counter() - t0
         stats.nodes_drawn = int(alive.sum())
 
@@ -398,29 +424,31 @@ def render_arrays(
             None if edge_weights is None else np.asarray(edge_weights)
         )
         t0 = time.perf_counter()
-        for i, chunk in enumerate(
-            stream.device_chunks(prefetch=cfg.prefetch, stats=sstats)
-        ):
-            winc = None
-            if weights is not None:
-                wsl = weights[i * cs : (i + 1) * cs]
-                if len(wsl) < cs:
-                    wsl = np.pad(wsl, (0, cs - len(wsl)))
-                winc = jnp.asarray(
-                    np.clip(np.round(wsl), 1, _MAX_INC).astype(np.int32)
-                )
-            t1 = time.perf_counter()
-            acc = _edge_splat_update(
-                acc, chunk, pxy_ext, groups_ext, winc,
-                hs, ws, cfg.edge_samples, n_groups, cfg.backend,
-            )
-            if cfg.time_raster:
-                jax.block_until_ready(acc)
-                sstats.raster_update_s += time.perf_counter() - t1
-                sstats.raster_chunks += 1
-            sstats.chunks += 1
-            sstats.edges_streamed += chunk.shape[0]
-        jax.block_until_ready(acc)
+        with tr.span("render.edges", chunk_size=cs, samples=cfg.edge_samples):
+            for i, chunk in enumerate(
+                stream.device_chunks(prefetch=cfg.prefetch, stats=sstats)
+            ):
+                winc = None
+                if weights is not None:
+                    wsl = weights[i * cs : (i + 1) * cs]
+                    if len(wsl) < cs:
+                        wsl = np.pad(wsl, (0, cs - len(wsl)))
+                    winc = jnp.asarray(
+                        np.clip(np.round(wsl), 1, _MAX_INC).astype(np.int32)
+                    )
+                t1 = time.perf_counter()
+                with tr.span("render.edge_chunk", chunk=i):
+                    acc = _edge_splat_update(
+                        acc, chunk, pxy_ext, groups_ext, winc,
+                        hs, ws, cfg.edge_samples, n_groups, cfg.backend,
+                    )
+                    if cfg.time_raster:
+                        jax.block_until_ready(acc)
+                        sstats.raster_update_s += time.perf_counter() - t1
+                        sstats.raster_chunks += 1
+                sstats.chunks += 1
+                sstats.edges_streamed += chunk.shape[0]
+            jax.block_until_ready(acc)
         stats.edge_raster_s = time.perf_counter() - t0
         sstats.passes += 1
         sstats.seconds = stats.edge_raster_s
@@ -437,23 +465,25 @@ def render_arrays(
         sstats.peak_host_bytes = stream.host_bytes(cfg.prefetch)
 
     t0 = time.perf_counter()
-    if node_acc is None and edge_acc is None:
-        image = np.broadcast_to(
-            np.asarray(cfg.background, np.uint8), (cfg.height, cfg.width, 3)
-        ).copy()
-    else:
-        image = np.asarray(
-            _compose(
-                node_acc,
-                edge_acc,
-                jnp.asarray(PALETTE, jnp.float32),
-                jnp.asarray(np.asarray(cfg.background, np.float32)),
-                cfg.node_gain,
-                cfg.edge_gain,
-                cfg.edge_alpha,
-                ss,
+    with tr.span("render.compose", ss=ss):
+        if node_acc is None and edge_acc is None:
+            image = np.broadcast_to(
+                np.asarray(cfg.background, np.uint8),
+                (cfg.height, cfg.width, 3),
+            ).copy()
+        else:
+            image = np.asarray(
+                _compose(
+                    node_acc,
+                    edge_acc,
+                    jnp.asarray(PALETTE, jnp.float32),
+                    jnp.asarray(np.asarray(cfg.background, np.float32)),
+                    cfg.node_gain,
+                    cfg.edge_gain,
+                    cfg.edge_alpha,
+                    ss,
+                )
             )
-        )
     stats.compose_s = time.perf_counter() - t0
     stats.peak_device_bytes += tree_bytes(node_acc, edge_acc)
     stats.seconds = time.perf_counter() - t_start
@@ -463,6 +493,7 @@ def render_arrays(
         "edge_raster_s": stats.edge_raster_s,
         "compose_s": stats.compose_s,
     }
+    stats.publish()
     return image, stats
 
 

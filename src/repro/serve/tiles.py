@@ -43,37 +43,15 @@ import numpy as np
 
 from repro.core.pipeline import BGVConfig, BGVResult, full_layout_colored
 from repro.data.edge_store import as_edge_store
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import get_tracer
+
+# The recompile meter lives in repro.obs.meters now (idempotent listener
+# registration, shared jax.compiles counter); this import keeps the
+# historical `from repro.serve.tiles import jit_compile_count` path — and
+# the `repro.serve` lazy export resolving through it — working.
+from repro.obs.meters import jit_compile_count  # noqa: F401
 from repro.render import RenderConfig, render_arrays
-
-# ---------------------------------------------------------------------------
-# Recompile meter
-
-
-_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
-_compile_count = 0
-_listener_registered = False
-
-
-def _on_compile_event(name, *args, **kwargs):
-    global _compile_count
-    if name == _COMPILE_EVENT:
-        _compile_count += 1
-
-
-def jit_compile_count() -> int:
-    """Monotone count of XLA backend compiles in this process, observed via
-    ``jax.monitoring`` (cache hits — including persistent-cache hits — do
-    not fire the event). Counting starts at the first call; callers take
-    deltas. The serve benchmark's "steady-state ticks trigger zero
-    recompilation" check is a flat delta across the measured phase."""
-    global _listener_registered
-    if not _listener_registered:
-        from jax import monitoring
-
-        monitoring.register_event_duration_secs_listener(_on_compile_event)
-        _listener_registered = True
-    return _compile_count
-
 
 # ---------------------------------------------------------------------------
 # Tile addressing
@@ -307,17 +285,23 @@ class TilePyramid:
     def render_tile(self, spec) -> np.ndarray:
         """Render one tile (pyramid or drill) → [tile, tile, 3] uint8."""
         if isinstance(spec, TileSpec):
-            img, _ = render_arrays(
-                self._positions,
-                self._radii,
-                self._groups,
-                self._sg_edges,
-                edge_weights=self._sg_weights,
-                cfg=self.render_config(spec),
-            )
+            with get_tracer().span(
+                "serve.render_tile", level=spec.level, x=spec.x, y=spec.y
+            ):
+                img, _ = render_arrays(
+                    self._positions,
+                    self._radii,
+                    self._groups,
+                    self._sg_edges,
+                    edge_weights=self._sg_weights,
+                    cfg=self.render_config(spec),
+                )
             return img
         if isinstance(spec, DrillSpec):
-            return self._render_drill(spec.community)
+            with get_tracer().span(
+                "serve.render_drill", community=spec.community
+            ):
+                return self._render_drill(spec.community)
         raise TypeError(f"unknown tile spec {spec!r}")
 
     def _render_drill(self, community: int) -> np.ndarray:
@@ -430,11 +414,15 @@ class TileEngine:
         req.done = True
         req.latency_s = time.perf_counter() - req._t0
         self.served += 1
+        REGISTRY.histogram("serve.latency_s").record(req.latency_s)
+        if not hit:
+            REGISTRY.histogram("serve.miss_latency_s").record(req.latency_s)
 
     def submit(self, req: TileRequest) -> bool:
         """Attach a request. Cache hits complete before returning; misses
         queue for the next ``tick``. Always accepts (returns True — the
         slot cap bounds per-tick render work, not the backlog)."""
+        REGISTRY.counter("serve.requests").inc()
         req._t0 = time.perf_counter()
         tile = self.cache.get(req.spec)
         if tile is not None:
@@ -442,6 +430,17 @@ class TileEngine:
         else:
             self._pending.append(req)
         return True
+
+    def publish_cache_metrics(self, registry=None) -> None:
+        """Mirror the LRU cache accounting into ``serve.cache_*`` gauges
+        (last-value snapshots; called per tick and safe to call anytime)."""
+        reg = registry if registry is not None else REGISTRY
+        reg.gauge("serve.cache_bytes").set(self.cache.bytes)
+        reg.gauge("serve.cache_tiles").set(len(self.cache))
+        reg.gauge("serve.cache_hits").set(self.cache.hits)
+        reg.gauge("serve.cache_misses").set(self.cache.misses)
+        reg.gauge("serve.cache_evictions").set(self.cache.evictions)
+        reg.gauge("serve.cache_hit_rate").set(self.cache.hit_rate)
 
     def tick(self) -> list[TileRequest]:
         """Render up to ``slots`` distinct pending tile addresses and
@@ -457,9 +456,12 @@ class TileEngine:
                     break
         done: list[TileRequest] = []
         t0 = time.perf_counter()
-        tiles = {spec: self.pyramid.render_tile(spec) for spec in batch}
-        self.render_s += time.perf_counter() - t0
+        with get_tracer().span("serve.tick", batch=len(batch)):
+            tiles = {spec: self.pyramid.render_tile(spec) for spec in batch}
+        tick_s = time.perf_counter() - t0
+        self.render_s += tick_s
         self.rendered += len(tiles)
+        REGISTRY.histogram("serve.tick_render_s").record(tick_s)
         for spec, tile in tiles.items():
             self.cache.put(spec, tile)
         remaining = deque()
@@ -470,6 +472,7 @@ class TileEngine:
             else:
                 remaining.append(req)
         self._pending = remaining
+        self.publish_cache_metrics()
         return done
 
     def request(self, spec) -> np.ndarray:
@@ -491,13 +494,15 @@ class TileEngine:
         n = 0
         specs = list(self.pyramid.specs(levels))
         specs += [DrillSpec(int(c)) for c in drills]
-        for spec in specs:
-            if spec not in self.cache:
-                t0 = time.perf_counter()
-                self.cache.put(spec, self.pyramid.render_tile(spec))
-                self.render_s += time.perf_counter() - t0
-                self.rendered += 1
-                n += 1
+        with get_tracer().span("serve.warmup", tiles=len(specs)):
+            for spec in specs:
+                if spec not in self.cache:
+                    t0 = time.perf_counter()
+                    self.cache.put(spec, self.pyramid.render_tile(spec))
+                    self.render_s += time.perf_counter() - t0
+                    self.rendered += 1
+                    n += 1
+        self.publish_cache_metrics()
         return n
 
 
