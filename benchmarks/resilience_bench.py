@@ -1,0 +1,276 @@
+"""Resilience gates: kill-and-resume must be sha256-bit-identical with
+bounded re-work, injected store faults must quarantine visibly while the
+run completes, and NaN-poisoned layouts must recover under the FA2
+divergence sentinel (``--check`` enforces all three).
+
+    PYTHONPATH=src python -m benchmarks.resilience_bench [--quick] \
+        [--check] [--json resilience.json]
+    PYTHONPATH=src python -m benchmarks.run --only resilience
+
+CSV rows (name,us_per_call,derived) per the harness contract.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import tempfile
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import SUITE, make_record, row, write_bench_json
+from repro.core import StreamConfig, biggraphvis, default_config
+from repro.core import forceatlas2 as fa2
+from repro.graph import mode_degree
+from repro.resilience import (
+    ChaosConfig,
+    ChaosEdgeStore,
+    KillSwitch,
+    SimulatedPreemption,
+    StreamCheckpointer,
+    ValidationPolicy,
+    poison_weights,
+)
+
+# Mirror stream/obs_bench's fixed streaming shape: several chunks per pass
+# so there are many distinct chunk boundaries to kill at.
+BLOCK = 2048
+CHUNK = 16384
+
+REDO_GATE = 0.10  # resumed re-work: extra chunks / uninterrupted chunks
+
+
+def _setup(graph: str, rounds: int):
+    builder, n = SUITE[graph]
+    edges = builder()
+    cfg = default_config(n, len(edges), mode_degree(edges, n),
+                         rounds=rounds, iterations=10)
+    cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=BLOCK))
+    return edges, n, cfg
+
+
+def _digest(res) -> str:
+    h = hashlib.sha256()
+    sg = res.supergraph
+    for a in (res.labels, sg.edges, sg.weights, sg.sizes, sg.labels,
+              res.positions):
+        h.update(np.asarray(a).tobytes())
+    h.update(np.float64(res.modularity).tobytes())
+    return h.hexdigest()
+
+
+def measure_kill_resume(graph: str = "ppart-8k", rounds: int = 2):
+    """Baseline, killed, and resumed runs of the same streamed workload.
+
+    Returns a metrics dict: ``identical`` (resumed digest == baseline),
+    ``extra_chunk_frac`` (chunks processed beyond the uninterrupted run's,
+    deterministic given the kill boundary and checkpoint cadence), and the
+    three wall times."""
+    edges, n, cfg = _setup(graph, rounds)
+    scfg = StreamConfig(chunk_size=CHUNK)
+
+    t0 = time.perf_counter()
+    base = biggraphvis(edges, n, cfg, stream=scfg)
+    t_base = time.perf_counter() - t0
+    total_chunks = base.stream.chunks
+    # kill mid-way through the detect passes (chunk boundaries are the
+    # only preemption points, so this is exactly reproducible)
+    kill_at = total_chunks // 2
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = StreamCheckpointer(d, every_chunks=1,
+                                on_boundary=KillSwitch(kill_at))
+        t0 = time.perf_counter()
+        try:
+            biggraphvis(edges, n, cfg, stream=scfg, checkpoint=ck)
+            raise AssertionError("kill switch never fired")
+        except SimulatedPreemption:
+            pass
+        t_killed = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        res = biggraphvis(
+            edges, n, cfg, stream=scfg,
+            checkpoint=StreamCheckpointer(d, every_chunks=1), resume=True,
+        )
+        t_resume = time.perf_counter() - t0
+
+    assert res.stream.resumed_at, "resume did not restore a checkpoint"
+    # the killed run completed kill_at+1 chunk updates and checkpointed
+    # every boundary, so re-work is whatever the resumed run re-streams
+    # beyond the remainder
+    extra = (kill_at + 1 + res.stream.chunks) - total_chunks
+    return {
+        "identical": float(_digest(res) == _digest(base)),
+        "total_chunks": total_chunks,
+        "kill_at": kill_at,
+        "extra_chunks": extra,
+        "extra_chunk_frac": extra / total_chunks,
+        "resumed_at": res.stream.resumed_at,
+        "t_base_s": t_base,
+        "t_killed_s": t_killed,
+        "t_resume_s": t_resume,
+    }
+
+
+def measure_quarantine(graph: str = "ppart-8k", rounds: int = 2):
+    """A permanently unreadable chunk must quarantine (visibly — counted
+    per pass in StreamStats) while the run completes with valid shapes."""
+    edges, n, cfg = _setup(graph, rounds)
+    store = ChaosEdgeStore(edges, ChaosConfig(io_error_offsets=(CHUNK,)))
+    scfg = StreamConfig(
+        chunk_size=CHUNK,
+        validation=ValidationPolicy(max_retries=1, retry_backoff_s=0.001),
+    )
+    t0 = time.perf_counter()
+    res = biggraphvis(store, n, cfg, stream=scfg)
+    t = time.perf_counter() - t0
+    labels = np.asarray(res.labels)
+    return {
+        "quarantined_chunks": res.stream.quarantined_chunks,
+        "quarantined_ids": sorted(set(res.stream.quarantined_chunk_ids)),
+        "retries": res.stream.retries,
+        "passes": res.stream.passes,
+        "completed": float(labels.shape == (n,) and bool((labels >= 0).all())
+                           and bool(np.isfinite(res.modularity))),
+        "t_s": t,
+    }
+
+
+def measure_nan_guard(graph: str = "ppart-8k", rounds: int = 2):
+    """NaN-poisoned layout weights: the guarded layout must stay finite
+    and report its recoveries; the unguarded one demonstrably diverges."""
+    edges, n, cfg = _setup(graph, rounds)
+    res = biggraphvis(edges, n, cfg, stream=StreamConfig(chunk_size=CHUNK))
+    sg = res.supergraph
+    e = np.asarray(sg.edges)
+    # poison *live* superedges only — the capacity padding is masked out
+    # of the attraction pass and would never propagate the NaNs
+    w = np.asarray(sg.weights, np.float32).copy()
+    live = max(1, int(res.n_superedges))
+    w[:live] = poison_weights(w[:live], k=8, seed=2)
+    mass = np.maximum(np.asarray(sg.sizes, np.float32), 0.0)
+    m = mass.shape[0]
+    p_off, _, _ = fa2.layout(e, w, mass, m, fa2.FA2Config(iterations=20))
+    t0 = time.perf_counter()
+    p_on, tr, _ = fa2.layout(
+        e, w, mass, m, fa2.FA2Config(iterations=20, nan_guard=True))
+    t = time.perf_counter() - t0
+    return {
+        "unguarded_finite": float(np.isfinite(np.asarray(p_off)).all()),
+        "guarded_finite": float(np.isfinite(np.asarray(p_on)).all()),
+        "recoveries": fa2.recovery_count(tr),
+        "t_s": t,
+    }
+
+
+def run(quick: bool = False, records: list | None = None):
+    rounds = 2
+    kr = measure_kill_resume(rounds=rounds)
+    yield row(
+        "resilience/kill_resume/ppart-8k", kr["t_resume_s"],
+        f"identical={int(kr['identical'])};extra_chunks={kr['extra_chunks']};"
+        f"kill_at={kr['kill_at']};total_chunks={kr['total_chunks']}",
+    )
+    q = measure_quarantine(rounds=rounds)
+    yield row(
+        "resilience/quarantine/ppart-8k", q["t_s"],
+        f"quarantined={q['quarantined_chunks']};retries={q['retries']};"
+        f"completed={int(q['completed'])}",
+    )
+    ng = measure_nan_guard(rounds=rounds)
+    yield row(
+        "resilience/nan_guard/ppart-8k", ng["t_s"],
+        f"recoveries={ng['recoveries']};finite={int(ng['guarded_finite'])}",
+    )
+    if records is not None:
+        records.append(make_record(
+            "resilience/kill_resume/ppart-8k",
+            config={"graph": "ppart-8k", "rounds": rounds,
+                    "chunk_size": CHUNK, "every_chunks": 1,
+                    "gate": REDO_GATE},
+            metrics={"us_per_call": kr["t_resume_s"] * 1e6, **{
+                k: v for k, v in kr.items() if k != "resumed_at"}},
+        ))
+        records.append(make_record(
+            "resilience/quarantine/ppart-8k",
+            config={"graph": "ppart-8k", "rounds": rounds,
+                    "chunk_size": CHUNK},
+            metrics={"us_per_call": q["t_s"] * 1e6,
+                     "quarantined_chunks": q["quarantined_chunks"],
+                     "retries": q["retries"], "passes": q["passes"],
+                     "completed": q["completed"]},
+        ))
+        records.append(make_record(
+            "resilience/nan_guard/ppart-8k",
+            config={"graph": "ppart-8k", "iterations": 20, "poisoned": 8},
+            metrics={"us_per_call": ng["t_s"] * 1e6,
+                     "recoveries": ng["recoveries"],
+                     "guarded_finite": ng["guarded_finite"],
+                     "unguarded_finite": ng["unguarded_finite"]},
+        ))
+
+
+def check(records: list) -> list[str]:
+    """The CI gates: resumed run bit-identical with re-work <= REDO_GATE,
+    injected faults quarantined visibly on a completing run, NaN-poisoned
+    layout recovered finite by the sentinel."""
+    by_name = {r["name"]: r["metrics"] for r in records}
+    kr = by_name["resilience/kill_resume/ppart-8k"]
+    assert kr["identical"] == 1.0, (
+        "resumed run is NOT bit-identical to the uninterrupted run"
+    )
+    assert kr["extra_chunk_frac"] <= REDO_GATE, (
+        f"resume re-work {kr['extra_chunk_frac']:.3f} exceeds gate "
+        f"{REDO_GATE} ({kr['extra_chunks']} of {kr['total_chunks']} chunks)"
+    )
+    q = by_name["resilience/quarantine/ppart-8k"]
+    assert q["quarantined_chunks"] >= q["passes"], (
+        f"expected the poisoned chunk quarantined every pass, got "
+        f"{q['quarantined_chunks']} over {q['passes']} passes"
+    )
+    assert q["completed"] == 1.0, "quarantined run did not complete cleanly"
+    ng = by_name["resilience/nan_guard/ppart-8k"]
+    assert ng["guarded_finite"] == 1.0, "nan_guard layout went non-finite"
+    assert ng["recoveries"] > 0, "nan_guard never fired on poisoned input"
+    return [
+        f"check: kill@{int(kr['kill_at'])} resume bit-identical, "
+        f"{int(kr['extra_chunks'])}/{int(kr['total_chunks'])} chunks redone "
+        f"(gate {REDO_GATE:.0%})",
+        f"check: injected fault quarantined {int(q['quarantined_chunks'])}x "
+        f"across {int(q['passes'])} passes; run completed",
+        f"check: nan_guard recovered {int(ng['recoveries'])} poisoned "
+        "iterations, layout finite (unguarded diverges: "
+        f"finite={int(ng['unguarded_finite'])})",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true", help="fewer repeats")
+    ap.add_argument("--json", default="",
+                    help="write unified structured records to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="gate bit-identity, re-work bound, quarantine "
+                         "visibility, and NaN recovery")
+    args = ap.parse_args()
+
+    records: list = []
+    print("name,us_per_call,derived")
+    for line in run(quick=args.quick, records=records):
+        print(line)
+    if args.json:
+        write_bench_json(args.json, "resilience_bench", records,
+                         timestamp=time.time())
+        print(f"wrote {args.json} ({len(records)} records)")
+    if args.check:
+        from benchmarks.run import step_summary
+
+        lines = check(records)
+        print("\n".join(lines))
+        step_summary("resilience_bench", lines)
+
+
+if __name__ == "__main__":
+    main()

@@ -46,9 +46,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (agg_bench, fa2_bench, fig_params, kernels_bench,
-                            obs_bench, quality_bench, render_bench, roofline,
-                            serve_bench, shard_bench, stream_bench,
-                            table1_speedup, table2_hashes, table3_rounds)
+                            obs_bench, quality_bench, render_bench,
+                            resilience_bench, roofline, serve_bench,
+                            shard_bench, stream_bench, table1_speedup,
+                            table2_hashes, table3_rounds)
     from benchmarks.common import record_from_csv, write_bench_json
 
     modules = {
@@ -65,6 +66,7 @@ def main() -> None:
         "quality": quality_bench,
         "shard": shard_bench,
         "obs": obs_bench,
+        "resilience": resilience_bench,
         "roofline": roofline,
     }
     if args.list:

@@ -65,6 +65,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.grid import ops as grid_ops
 from repro.kernels.repulsion import ops as repulsion_ops
@@ -93,6 +94,13 @@ class FA2Config:
     min_iterations: int = 0  # never stop before this many iterations
     init: str = "random"  # "random" | "degree" | "bfs"
     init_bfs_rounds: int = 32  # BFS depth-propagation rounds for init="bfs"
+    # Divergence sentinel (resilience, ISSUE 10): when on, an iteration
+    # whose forces contain a non-finite value is rolled back (positions and
+    # speed-controller memory kept) with the global speed halved, instead
+    # of NaN-poisoning every later position. Recovered iterations trace as
+    # [-1, -1, damped_speed] rows — ``recovery_count`` tallies them. Off by
+    # default: the guard-off graph is bit-identical to pre-sentinel code.
+    nan_guard: bool = False
 
 
 def init_positions(
@@ -360,6 +368,40 @@ def _apply_speed(state, f, mass, cfg: FA2Config):
     return (pos, f, global_speed), row
 
 
+def _apply_speed_guarded(state, f, mass, cfg: FA2Config):
+    """``_apply_speed`` behind the divergence sentinel.
+
+    With ``cfg.nan_guard`` off this IS ``_apply_speed`` (same jaxpr, so
+    guard-off layouts stay bit-identical). With it on, a non-finite force
+    array skips the update entirely — positions and speed-controller
+    memory are kept, the global speed is halved (so a diverging step size
+    shrinks until forces are finite again) — and the trace row is
+    ``[-1, -1, damped_speed]``: g_swing is otherwise ≥ 1e-9, so negative
+    rows unambiguously mark recoveries (``recovery_count``) and are
+    excluded from the adaptive stop test.
+    """
+    if not cfg.nan_guard:
+        return _apply_speed(state, f, mass, cfg)
+    pos, prev_force, global_speed = state
+
+    def recover():
+        damped = 0.5 * global_speed
+        neg = -jnp.ones((), damped.dtype)
+        return (pos, prev_force, damped), jnp.stack([neg, neg, damped])
+
+    return jax.lax.cond(
+        jnp.all(jnp.isfinite(f)),
+        lambda: _apply_speed(state, f, mass, cfg),
+        recover,
+    )
+
+
+def recovery_count(trace) -> int:
+    """Number of iterations the ``nan_guard`` sentinel rolled back in a
+    ``layout``/``step`` trace (negative-g_swing rows)."""
+    return int((np.asarray(trace)[:, 0] < 0).sum())
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "n"))
 def step(
     state, edges, weights, mass, radii, cfg: FA2Config, n: int,
@@ -381,7 +423,7 @@ def step(
     f = _gravity(pos, mass, cfg)
     f = f + _attraction(pos, edges, weights, n)
     f = f + _repulsion_forces(pos, mass, radii, cfg, cell=cell, order=order)
-    return _apply_speed(state, f, mass, cfg)
+    return _apply_speed_guarded(state, f, mass, cfg)
 
 
 def layout(
@@ -451,7 +493,7 @@ def _layout_jit(edges, weights, mass, n: int, cfg: FA2Config, pos0):
         f = _gravity(pos, mass, cfg)
         f = f + _attraction_sorted(pos, src, dst, w2, n)
         f = f + _repulsion_forces(pos, mass, radii, cfg, cell=cell, order=order)
-        core, row = _apply_speed(core, f, mass, cfg)
+        core, row = _apply_speed_guarded(core, f, mass, cfg)
         return core, cell, order, row
 
     def body(state, it):
@@ -625,7 +667,7 @@ def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
                     )
 
             f = jax.lax.all_gather(f_r, axes, axis=0, tiled=True)
-            core, row = _apply_speed(core, f, mass, cfg)
+            core, row = _apply_speed_guarded(core, f, mass, cfg)
             return core, cell, order, row
 
         def body(state, it):
@@ -641,7 +683,8 @@ def _sharded_layout_fn(mesh, cfg: FA2Config, n: int):
 
             def live_branch():
                 c, cell2, order2, row = live(core, cell, order, it)
-                done = (it + 1 >= cfg.min_iterations) & (
+                # row[0] < 0 marks a nan_guard recovery — never "converged".
+                done = (it + 1 >= cfg.min_iterations) & (row[0] >= 0) & (
                     row[0] <= cfg.stop_tolerance * row[1]
                 )
                 out = c + ((cell2, order2) if carry_grid else ())

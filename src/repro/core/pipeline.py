@@ -143,6 +143,7 @@ def default_config(
     stop_tolerance: float = 0.0,
     min_iterations: int = 0,
     init: str = "random",
+    nan_guard: bool = False,
 ) -> BGVConfig:
     """Paper-shaped defaults: 4 hash rows, CMS cols = max(256, |E| // 1000)
     (``default_cms_cols`` — see its docstring for why the sketch is denser
@@ -155,7 +156,9 @@ def default_config(
     ``stop_tolerance``/``min_iterations`` enable FA2's adaptive stop
     (``iterations`` becomes an upper bound) and ``init`` picks the
     starting positions ("random" | "degree" | "bfs") — both also seed the
-    full-graph knobs ``full_layout_colored`` reuses.
+    full-graph knobs ``full_layout_colored`` reuses. ``nan_guard`` turns
+    on FA2's divergence sentinel (non-finite iterations rolled back and
+    damped instead of NaN-poisoning the layout — core/forceatlas2.py).
     """
     cols = default_cms_cols(n_edges)
     return BGVConfig(
@@ -165,7 +168,7 @@ def default_config(
             iterations=iterations, repulsion=repulsion, grid_size=grid_size,
             grid_window=grid_window, grid_rebuild=grid_rebuild,
             stop_tolerance=stop_tolerance, min_iterations=min_iterations,
-            init=init,
+            init=init, nan_guard=nan_guard,
         ),
         s_cap=s_cap or min(n_nodes, 65536),
         max_super_edges=min(4 * n_edges, 262144),
@@ -222,6 +225,11 @@ def layout_supergraph(
         pos_live, _trace, iters_run = _block(
             run, sedges, sg.weights[:e_layout], mass
         )
+    if cfg.layout.nan_guard:
+        # Host sync on the trace is only paid when the sentinel is armed.
+        recovered = fa2.recovery_count(_trace)
+        if recovered:
+            REGISTRY.counter("errors.fa2_recoveries").inc(recovered)
     pos = jnp.zeros((cfg.s_cap, 2), pos_live.dtype).at[:s_layout].set(pos_live)
     return pos, int(iters_run)
 
@@ -234,6 +242,8 @@ def biggraphvis(
     put=None,
     render_path: str | None = None,
     render_cfg=None,
+    checkpoint=None,
+    resume=False,
 ) -> BGVResult:
     """Single-host driver. ``source`` is any engine edge source: an [E,2]
     unpadded int32 host array, an ``EdgeStore``, or a path to a ``.npy`` /
@@ -253,6 +263,14 @@ def biggraphvis(
     ``render_path``/``render_cfg`` are deprecated shims (one
     ``DeprecationWarning`` per process) forwarding to the render entry
     point, ``BGVResult.render(path, cfg=...)`` — call that instead.
+
+    ``checkpoint`` (a ``resilience.StreamCheckpointer``) and ``resume``
+    forward to the streaming engine: the edge-consuming stages persist
+    their state at chunk boundaries and a killed run restarts
+    bit-identically from the newest checkpoint — see
+    ``core/stream.stream_pipeline``. The layout itself is deterministic
+    given the supergraph and cheap relative to streaming, so it simply
+    re-runs after a resume.
     """
     tr = cfg.obs
     if tr is None and stream is not None:
@@ -264,6 +282,7 @@ def biggraphvis(
             source, n_nodes, cfg.scoda, cfg.cms, cfg.s_cap,
             cfg.max_super_edges,
             stream, put=put, tracer=tr,
+            checkpoint=checkpoint, resume=resume,
         )
         t = {
             "scoda_s": stats.stage_seconds["detect_s"],
@@ -369,12 +388,17 @@ def full_layout_colored(
         ),
         init=cfg.layout.init,
         init_bfs_rounds=cfg.layout.init_bfs_rounds,
+        nan_guard=cfg.layout.nan_guard,
     )
     mass = deg.astype(jnp.float32) + 1.0
     w = jnp.ones(edges.shape[0], jnp.float32)
     tr = cfg.obs if cfg.obs is not None else get_tracer()
     with tr.span("layout.full", n=n_nodes, repulsion=repulsion):
-        pos, _, iters_run = fa2.layout(edges, w, mass, n_nodes, lcfg)
+        pos, trace, iters_run = fa2.layout(edges, w, mass, n_nodes, lcfg)
+    if lcfg.nan_guard:
+        recovered = fa2.recovery_count(trace)
+        if recovered:
+            REGISTRY.counter("errors.fa2_recoveries").inc(recovered)
     REGISTRY.gauge("layout.full_iterations_run").set(int(iters_run))
     node_groups = color_groups(sg.sizes)[jnp.clip(sg.labels, 0, cfg.s_cap - 1)]
     return np.asarray(pos), np.asarray(node_groups)

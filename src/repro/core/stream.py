@@ -73,8 +73,14 @@ from repro.core.supergraph import (
 )
 from repro.data.edge_store import EDGE_DTYPE, InMemoryEdgeStore, as_edge_store
 from repro.kernels.compat import device_put_copied, shard_map_compat
-from repro.obs.metrics import REGISTRY
+from repro.obs.metrics import REGISTRY, ensure_error_counters
 from repro.obs.trace import get_tracer
+from repro.resilience.checkpoint import (
+    CheckpointMismatchError,
+    config_fingerprint,
+    restore_latest_valid,
+)
+from repro.resilience.validate import ValidationAccounting, validated_read
 
 
 @dataclass(frozen=True)
@@ -100,7 +106,13 @@ class StreamConfig:
 
     ``obs`` threads a ``repro.obs.Tracer`` through every engine stage
     (per-pass/per-chunk spans); None falls back to the process-global
-    tracer, a no-op until ``repro.obs.enable_tracing()``."""
+    tracer, a no-op until ``repro.obs.enable_tracing()``.
+
+    ``validation`` (a ``repro.resilience.ValidationPolicy``) makes every
+    chunk read defensive: transient I/O errors retry with backoff, chunks
+    that stay unreadable are quarantined (trash-filled, counted in
+    ``StreamStats``/``errors.*``), and out-of-range node ids drop to the
+    trash node — instead of any of those crashing a multi-pass run."""
 
     chunk_size: int = 1 << 16  # edges resident on device per chunk
     prefetch: int = 1  # host→device copies dispatched ahead of compute
@@ -110,6 +122,7 @@ class StreamConfig:
     shard_detect: bool = False  # shard the per-chunk edge passes over mesh
     shard_layout: bool = False  # node-partition the FA2 layout over mesh
     obs: object = None  # repro.obs.Tracer (None = process-global tracer)
+    validation: object = None  # resilience.ValidationPolicy (None = trusting)
 
 
 @dataclass
@@ -152,6 +165,16 @@ class StreamStats:
     raster_update_s: float = 0.0
     raster_chunks: int = 0
     stage_seconds: dict = field(default_factory=dict)
+    # Resilience accounting (ISSUE 10): validation/quarantine tallies are
+    # copied from the stream's ``ValidationAccounting`` (the matching
+    # ``errors.*`` counters increment at the point of occurrence);
+    # ``resumed_at`` records the checkpoint cursor a resumed run picked up
+    # from ("" for an uninterrupted run).
+    retries: int = 0
+    quarantined_chunks: int = 0
+    quarantined_chunk_ids: list = field(default_factory=list)
+    dropped_edges: int = 0
+    resumed_at: str = ""
 
     @property
     def edges_per_s(self) -> float:
@@ -166,6 +189,7 @@ class StreamStats:
         ``--metrics-out`` CLI dumps read these instead of hand-formatting
         the dataclass fields."""
         reg = registry if registry is not None else REGISTRY
+        ensure_error_counters(reg)  # degradation visible even at 0
         reg.counter("stream.runs").inc()
         reg.counter("stream.passes").inc(self.passes)
         reg.counter("stream.chunks").inc(self.chunks)
@@ -221,12 +245,18 @@ class EdgeChunkStream:
     """
 
     def __init__(self, source, n_nodes: int, chunk_size: int,
-                 block_size: int = 1):
+                 block_size: int = 1, policy=None):
         if chunk_size < 1:
             raise ValueError(f"chunk_size must be positive, got {chunk_size}")
         self.store = as_edge_store(source)
         self.n_nodes = n_nodes
         self.n_edges = self.store.n_edges
+        # Defensive reads (resilience.ValidationPolicy): every chunk goes
+        # through validated_read — retry/quarantine/range checks — which
+        # needs a mutable staging buffer, so the in-memory zero-copy slice
+        # path is disabled below when a policy is set.
+        self.policy = policy
+        self.acct = ValidationAccounting()
         # Round up so chunk boundaries align with SCoDA block boundaries,
         # and clamp to the padded edge list — a chunk larger than |E| would
         # only buy a bigger trash-padded buffer.
@@ -236,7 +266,9 @@ class EdgeChunkStream:
         self.n_chunks = max(1, -(-self.n_edges // self.chunk_size))
         self.passes = 0
         self.edges = (
-            self.store.array if isinstance(self.store, InMemoryEdgeStore) else None
+            self.store.array
+            if isinstance(self.store, InMemoryEdgeStore) and policy is None
+            else None
         )
         self._staging = None  # lazy ring of reusable disk-path buffers
         self._inflight = None  # device array whose transfer reads each buffer
@@ -283,19 +315,25 @@ class EdgeChunkStream:
         return base + self.staging_buffers(prefetch) * self.chunk_bytes
 
     def _read_chunk(self, i: int, buf: np.ndarray) -> np.ndarray:
+        if self.policy is not None:
+            return validated_read(
+                self.store, i, self.chunk_size, buf, self.n_nodes,
+                self.policy, self.acct,
+            )
         k = self.store.read_into(i * self.chunk_size, buf)
         if k < self.chunk_size:
             buf[k:] = self.n_nodes  # pad the tail with the trash node
         return buf
 
-    def _host_chunks(self):
+    def _host_chunks(self, start: int = 0):
         cs = self.chunk_size
         if self.edges is not None:
-            for i in range(self.n_chunks - 1):
+            for i in range(start, self.n_chunks - 1):
                 yield self.edges[i * cs:(i + 1) * cs]
-            yield self._tail_buf
+            if start <= self.n_chunks - 1:
+                yield self._tail_buf
         else:
-            for i in range(self.n_chunks):
+            for i in range(start, self.n_chunks):
                 buf = np.empty((cs, 2), dtype=EDGE_DTYPE)
                 yield self._read_chunk(i, buf)
 
@@ -304,7 +342,7 @@ class EdgeChunkStream:
         return self._host_chunks()
 
     def device_chunks(self, put=None, prefetch: int = 1,
-                      stats: StreamStats | None = None):
+                      stats: StreamStats | None = None, start: int = 0):
         """One pass of device-resident chunks, transfers overlapping compute.
 
         In-memory sources dispatch ``put`` up to ``prefetch`` chunks ahead
@@ -312,13 +350,14 @@ class EdgeChunkStream:
         sources run the double-buffered pipeline described in the class
         docstring; their default ``put`` is a forced-copy ``device_put``,
         and any caller-supplied ``put`` must also copy (StreamRunner's
-        sharded ``put`` does).
+        sharded ``put`` does). ``start`` skips the first chunks — the
+        checkpoint/resume cursor (``stream_detect(resume=)``).
         """
         self.passes += 1
         depth = max(0, prefetch)
         if self.edges is not None:
             yield from _dispatch_ahead(
-                self._host_chunks(), put or jnp.asarray, depth
+                self._host_chunks(start), put or jnp.asarray, depth
             )
             return
 
@@ -336,7 +375,7 @@ class EdgeChunkStream:
         # (device_put is asynchronous; CPU only hides this by luck).
         inflight = self._inflight
         pending = deque()
-        for i in range(self.n_chunks):
+        for i in range(start, self.n_chunks):
             b = i % nbuf
             if inflight[b] is not None:
                 # The ring wrapped: before overwriting this staging buffer,
@@ -473,6 +512,8 @@ def stream_detect(
     mesh=None,
     shard: bool = False,
     tracer=None,
+    ckpt=None,
+    resume: dict | None = None,
 ):
     """Multi-round SCoDA over the chunk stream; graph degrees are fused into
     the first pass. Returns (labels [n], scoda_deg [n], graph_deg [n]).
@@ -484,6 +525,16 @@ def stream_detect(
     the chunk size divide by the device count. ``tracer`` emits the
     ``detect``/``detect.round``/``detect.chunk`` span tree (None =
     process-global tracer).
+
+    ``ckpt`` (a ``resilience.StreamCheckpointer``) is notified at every
+    chunk boundary with the normalized resume cursor — the (round, chunk)
+    of the next unprocessed chunk — and a lazy host-side payload of the
+    full detect state (SCoDA com/deg + graph-degree accumulator), all
+    unsharded host arrays. ``resume`` is that payload plus the cursor
+    (``{"round", "chunk", "com", "deg", "gdeg"}``): the loops pick up
+    exactly there, so a resumed run replays no chunk and skips none —
+    bit-identical to uninterrupted, on any device count (replicated state
+    is re-``device_put`` by the first update that consumes it).
     """
     tr = tracer if tracer is not None else get_tracer()
     m = _effective_mesh(mesh, shard, cfg.block_size, stream.chunk_size)
@@ -497,15 +548,22 @@ def stream_detect(
         upd, deg_upd = None, _degree_update
     state = scoda_init(n_nodes)
     gdeg = jnp.zeros(n_nodes + 1, dtype=jnp.int32)
+    start_round, start_chunk = 0, 0
+    if resume is not None:
+        start_round, start_chunk = int(resume["round"]), int(resume["chunk"])
+        state = (jnp.asarray(resume["com"]), jnp.asarray(resume["deg"]))
+        gdeg = jnp.asarray(resume["gdeg"])
     with tr.span(
         "detect", rounds=cfg.rounds, chunk_size=stream.chunk_size,
         devices=m.size if m is not None else 1,
     ):
-        for r in range(cfg.rounds):
+        for r in range(start_round, cfg.rounds):
             thr = jnp.int32(round_threshold(cfg, r))
+            c0 = start_chunk if r == start_round else 0
             with tr.span("detect.round", round=r):
                 for i, chunk in enumerate(
-                    stream.device_chunks(put, prefetch, stats)
+                    stream.device_chunks(put, prefetch, stats, start=c0),
+                    start=c0,
                 ):
                     with tr.span("detect.chunk", round=r, chunk=i):
                         if r == 0:
@@ -517,8 +575,21 @@ def stream_detect(
                     if stats is not None:
                         stats.chunks += 1
                         stats.edges_streamed += _chunk_edges(chunk)
+                    if ckpt is not None:
+                        last = i + 1 == stream.n_chunks
+                        nr, nc = (r + 1, 0) if last else (r, i + 1)
+                        ckpt.boundary(
+                            "detect", nr, nc, last,
+                            # Bind current values: np.asarray blocks until
+                            # the update is done, before the next donation.
+                            lambda s=state, g=gdeg: {
+                                "com": np.asarray(s[0]),
+                                "deg": np.asarray(s[1]),
+                                "gdeg": np.asarray(g),
+                            },
+                        )
     if stats is not None:
-        stats.passes += cfg.rounds
+        stats.passes += cfg.rounds - start_round
         _account_pass_peaks(
             stats, stream, prefetch, state, gdeg,
             devices=m.size if m is not None else 1,
@@ -545,8 +616,17 @@ def stream_supergraph(
     mesh=None,
     shard: bool = False,
     tracer=None,
+    ckpt=None,
+    resume: dict | None = None,
 ):
     """One fused pass: superedge aggregation + modularity accumulation.
+
+    ``ckpt``/``resume`` follow ``stream_detect``'s contract. The supergraph
+    payload carries the aggregation + modularity accumulators *and* the
+    detect outputs (labels, graph degrees) so a run killed in this phase
+    resumes without re-running detect; dense labels and the CMS community
+    sizes are deterministic functions of the labels and are recomputed on
+    resume rather than checkpointed.
 
     CMS community sizing is node-keyed (one sketch update per node, weight =
     graph degree) and so needs no edge pass. Returns (Supergraph, Q) with Q
@@ -585,7 +665,38 @@ def stream_supergraph(
         mod_ext = jnp.concatenate([labels_dense, jnp.array([-1], jnp.int32)])
         agg = agg_init(s_cap, max_super_edges)
         mod = modularity_init(n_nodes) if with_modularity else None
-        for i, chunk in enumerate(stream.device_chunks(put, prefetch, stats)):
+        start_chunk = 0
+        if resume is not None:
+            start_chunk = int(resume["chunk"])
+            agg = tuple(
+                jnp.asarray(resume[k])
+                for k in ("agg_a", "agg_b", "agg_w", "agg_n")
+            )
+            if with_modularity:
+                mod = tuple(
+                    jnp.asarray(resume[k])
+                    for k in ("mod_m", "mod_intra", "mod_dcom")
+                )
+
+        def payload(a, md):
+            out = {
+                "labels": np.asarray(labels),
+                "deg": np.asarray(node_deg),
+                "agg_a": np.asarray(a[0]),
+                "agg_b": np.asarray(a[1]),
+                "agg_w": np.asarray(a[2]),
+                "agg_n": np.asarray(a[3]),
+            }
+            if md is not None:
+                out["mod_m"] = np.asarray(md[0])
+                out["mod_intra"] = np.asarray(md[1])
+                out["mod_dcom"] = np.asarray(md[2])
+            return out
+
+        for i, chunk in enumerate(
+            stream.device_chunks(put, prefetch, stats, start=start_chunk),
+            start=start_chunk,
+        ):
             with tr.span("supergraph.chunk", chunk=i):
                 if time_agg and stats is not None:
                     t0 = time.perf_counter()
@@ -600,6 +711,12 @@ def stream_supergraph(
             if stats is not None:
                 stats.chunks += 1
                 stats.edges_streamed += _chunk_edges(chunk)
+            if ckpt is not None:
+                last = i + 1 == stream.n_chunks
+                ckpt.boundary(
+                    "supergraph", 0, i + 1, last,
+                    functools.partial(payload, agg, mod),
+                )
     if stats is not None:
         stats.passes += 1
         _account_pass_peaks(
@@ -631,6 +748,8 @@ def stream_pipeline(
     put=None,
     with_modularity: bool = True,
     tracer=None,
+    checkpoint=None,
+    resume=False,
 ):
     """Edge source → (labels, graph degrees, Supergraph, Q, StreamStats).
 
@@ -639,6 +758,16 @@ def stream_pipeline(
     edge file or shard directory, or a list of shard paths. The engine's
     full edge-consuming pipeline; layout/coloring operate on the (small,
     device-resident) supergraph and stay with the caller.
+
+    Fault tolerance (ISSUE 10): ``checkpoint`` is a
+    ``resilience.StreamCheckpointer`` — the run then persists its full
+    streaming state at the checkpointer's cadence, stamped with this
+    config's fingerprint. ``resume`` is False, True (restore the newest
+    valid checkpoint from ``checkpoint.ckpt_dir``), or a directory path to
+    restore from; a fingerprint mismatch raises
+    ``CheckpointMismatchError``, and a resume with no checkpoint on disk
+    starts fresh. Resumed runs are bit-identical to uninterrupted ones on
+    any device count (tests/test_resilience.py).
     """
     store = as_edge_store(source)
     cfg = stream_cfg or StreamConfig(chunk_size=max(1, store.n_edges))
@@ -646,20 +775,62 @@ def stream_pipeline(
         cfg.obs if cfg.obs is not None else get_tracer()
     )
     stream = EdgeChunkStream(
-        store, n_nodes, cfg.chunk_size, block_size=scoda_cfg.block_size
+        store, n_nodes, cfg.chunk_size, block_size=scoda_cfg.block_size,
+        policy=cfg.validation,
     )
     stats = StreamStats(chunk_size=stream.chunk_size)
+
+    fingerprint = config_fingerprint(
+        n_nodes=n_nodes, n_edges=store.n_edges, chunk_size=stream.chunk_size,
+        scoda=scoda_cfg, cms=cms_cfg, s_cap=s_cap,
+        max_super_edges=max_super_edges, agg_backend=cfg.agg_backend,
+        with_modularity=with_modularity,
+    )
+    if checkpoint is not None:
+        checkpoint.fingerprint = fingerprint
+    resume_detect = resume_sg = None
+    labels = gdeg = None
+    if resume:
+        ckpt_dir = resume if isinstance(resume, (str,)) else (
+            checkpoint.ckpt_dir if checkpoint is not None else None
+        )
+        found = restore_latest_valid(ckpt_dir) if ckpt_dir else None
+        if found is not None:
+            arrays, meta = found
+            if meta.get("fingerprint") and meta["fingerprint"] != fingerprint:
+                raise CheckpointMismatchError(
+                    f"checkpoint {ckpt_dir} was written by a run with "
+                    f"fingerprint {meta['fingerprint']}, this run is "
+                    f"{fingerprint} — resuming would not be bit-identical"
+                )
+            phase = meta.get("phase", "detect")
+            cursor = {"round": meta.get("round", 0), "chunk": meta["chunk"]}
+            if phase == "detect":
+                resume_detect = {**cursor, **arrays}
+            else:
+                resume_sg = {**cursor, **arrays}
+                labels = jnp.asarray(arrays["labels"])
+                gdeg = jnp.asarray(arrays["deg"])
+            stats.resumed_at = (
+                f"{phase}:r{cursor['round']}:c{cursor['chunk']}"
+            )
+
     with tr.span(
         "stream_pipeline", n_nodes=n_nodes, n_edges=store.n_edges,
         chunk_size=stream.chunk_size,
     ):
-        t0 = time.perf_counter()
-        labels, _scoda_deg, gdeg = stream_detect(
-            stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch,
-            stats=stats, mesh=cfg.mesh, shard=cfg.shard_detect, tracer=tr,
-        )
-        jax.block_until_ready(labels)
-        stats.stage_seconds["detect_s"] = time.perf_counter() - t0
+        # Resuming past detect skips the stage; keep the timing key so
+        # downstream consumers (pipeline timings) never miss it.
+        stats.stage_seconds["detect_s"] = 0.0
+        if resume_sg is None:
+            t0 = time.perf_counter()
+            labels, _scoda_deg, gdeg = stream_detect(
+                stream, n_nodes, scoda_cfg, put=put, prefetch=cfg.prefetch,
+                stats=stats, mesh=cfg.mesh, shard=cfg.shard_detect, tracer=tr,
+                ckpt=checkpoint, resume=resume_detect,
+            )
+            jax.block_until_ready(labels)
+            stats.stage_seconds["detect_s"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         sg, q = stream_supergraph(
@@ -668,10 +839,15 @@ def stream_pipeline(
             with_modularity=with_modularity,
             agg_backend=cfg.agg_backend, time_agg=cfg.time_agg,
             mesh=cfg.mesh, shard=cfg.shard_detect, tracer=tr,
+            ckpt=checkpoint, resume=resume_sg,
         )
         jax.block_until_ready(sg.edges)
         stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0
     stats.seconds = sum(stats.stage_seconds.values())
+    stats.retries = stream.acct.retries
+    stats.quarantined_chunks = len(stream.acct.quarantined)
+    stats.quarantined_chunk_ids = list(stream.acct.quarantined)
+    stats.dropped_edges = stream.acct.dropped_edges
     stats.publish()
     return labels, gdeg, sg, q, stats
 

@@ -31,6 +31,7 @@ out-of-core), and the module doubles as the converter CLI:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 from pathlib import Path
 
@@ -39,9 +40,17 @@ import numpy as np
 EDGE_DTYPE = np.dtype(np.int32)
 ROW_BYTES = 2 * EDGE_DTYPE.itemsize
 
+MANIFEST_NAME = "manifest.json"
+
 
 class EdgeStoreError(ValueError):
     """A source cannot be interpreted as an [E, 2] int32 edge list."""
+
+
+class CorruptStoreError(EdgeStoreError):
+    """A store's on-disk bytes contradict its declared layout — a truncated
+    or trailing-garbage file, or shard sizes that don't sum to the declared
+    edge count. The message names the file and byte offset of the damage."""
 
 
 def _check_edge_shape(shape: tuple, what: str) -> None:
@@ -126,12 +135,29 @@ class NpyEdgeStore(EdgeStore):
 
     def __init__(self, path: str | os.PathLike):
         self.path = os.fspath(path)
-        mm = np.load(self.path, mmap_mode="r")
+        try:
+            mm = np.load(self.path, mmap_mode="r")
+        except ValueError as e:
+            # Bad/truncated header, or data section shorter than the header
+            # declares (np.memmap refuses to map past EOF in mode "r").
+            raise CorruptStoreError(
+                f"{self.path}: truncated or corrupt .npy "
+                f"(file ends at byte {os.path.getsize(self.path)}): {e}"
+            ) from e
         _check_edge_shape(mm.shape, self.path)
         if mm.dtype != EDGE_DTYPE:
             raise EdgeStoreError(
                 f"{self.path}: mmap edge files must be int32, got {mm.dtype} "
                 "(convert with `python -m repro.data.edge_store convert`)"
+            )
+        # The header declares the shape; verify the file actually holds that
+        # many bytes (np.load would otherwise mmap short and fault on read).
+        need = mm.offset + mm.size * mm.itemsize
+        have = os.path.getsize(self.path)
+        if have < need:
+            raise CorruptStoreError(
+                f"{self.path}: truncated — header declares {len(mm)} edges "
+                f"({need} bytes) but the file ends at byte {have}"
             )
         self._mm = mm
         self.n_edges = len(mm)
@@ -149,9 +175,10 @@ class BinEdgeStore(EdgeStore):
         self.path = os.fspath(path)
         size = os.path.getsize(self.path)
         if size % ROW_BYTES:
-            raise EdgeStoreError(
+            raise CorruptStoreError(
                 f"{self.path}: size {size} is not a multiple of {ROW_BYTES} "
-                "bytes (int32 src,dst pairs)"
+                f"bytes (int32 src,dst pairs) — trailing partial record "
+                f"starts at byte {size - size % ROW_BYTES}"
             )
         self.n_edges = size // ROW_BYTES
         self._mm = (
@@ -169,12 +196,18 @@ class BinEdgeStore(EdgeStore):
 class ShardedEdgeStore(EdgeStore):
     """Concatenation of sub-stores (one file per shard); empty shards ok."""
 
-    def __init__(self, stores):
+    def __init__(self, stores, expected_edges: int | None = None):
         self.stores = [as_edge_store(s) for s in stores]
         if not self.stores:
             raise EdgeStoreError("sharded store needs at least one shard")
         self.offsets = np.cumsum([0] + [s.n_edges for s in self.stores])
         self.n_edges = int(self.offsets[-1])
+        if expected_edges is not None and self.n_edges != expected_edges:
+            raise CorruptStoreError(
+                f"sharded store: shard sizes sum to {self.n_edges} edges but "
+                f"{expected_edges} were declared — shard rows "
+                f"{[int(s.n_edges) for s in self.stores]}"
+            )
 
     def read_into(self, start: int, out: np.ndarray) -> int:
         want = max(0, min(len(out), self.n_edges - start))
@@ -194,11 +227,42 @@ class ShardedEdgeStore(EdgeStore):
         return sum(s.resident_bytes for s in self.stores)
 
 
+def _open_manifest_shards(p: Path, manifest_path: Path) -> EdgeStore:
+    """Open a shard directory against its ``manifest.json`` (written by
+    ``write_shards``): every listed shard must exist and hold exactly its
+    declared row count, and the totals must agree — a missing, truncated,
+    or swapped shard raises ``CorruptStoreError`` naming file and offset
+    instead of silently streaming a shorter edge list."""
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    stores = []
+    for entry in manifest["shards"]:
+        q = p / entry["file"]
+        if not q.exists():
+            raise CorruptStoreError(
+                f"{p}: shard {entry['file']} is listed in {MANIFEST_NAME} "
+                f"({entry['edges']} edges) but missing on disk"
+            )
+        s = open_edge_store(q)
+        if s.n_edges != entry["edges"]:
+            raise CorruptStoreError(
+                f"{q}: holds {s.n_edges} edges but {MANIFEST_NAME} declares "
+                f"{entry['edges']} — file diverges at byte "
+                f"{min(s.n_edges, entry['edges']) * ROW_BYTES} of the data"
+            )
+        stores.append(s)
+    return ShardedEdgeStore(stores, expected_edges=manifest["total_edges"])
+
+
 def open_edge_store(path: str | os.PathLike) -> EdgeStore:
-    """Open a path as a store: ``.npy`` → mmap, directory → sorted shards,
-    anything else → raw int32-pair binary."""
+    """Open a path as a store: ``.npy`` → mmap, directory → sharded (its
+    ``manifest.json`` verified when present, sorted ``.npy``/``.bin`` files
+    otherwise), anything else → raw int32-pair binary."""
     p = Path(path)
     if p.is_dir():
+        manifest = p / MANIFEST_NAME
+        if manifest.exists():
+            return _open_manifest_shards(p, manifest)
         shards = sorted(q for q in p.iterdir() if q.suffix in (".npy", ".bin"))
         if not shards:
             raise EdgeStoreError(f"{p}: no .npy/.bin shard files found")
@@ -278,7 +342,10 @@ def write_shards(
     chunk_rows: int = DEFAULT_WRITE_CHUNK,
 ) -> list:
     """Split ``source`` into ``shard-NNNNN.{npy,bin}`` files of at most
-    ``shard_edges`` rows each; returns the shard paths."""
+    ``shard_edges`` rows each, plus a ``manifest.json`` declaring per-shard
+    and total edge counts (verified on open — a shard lost or truncated
+    after writing raises ``CorruptStoreError`` instead of streaming a
+    silently shorter edge list); returns the shard paths."""
     if shard_edges < 1:
         raise EdgeStoreError(f"shard_edges must be positive, got {shard_edges}")
     store = as_edge_store(source)
@@ -286,10 +353,14 @@ def write_shards(
     directory.mkdir(parents=True, exist_ok=True)
     writer = {"npy": write_npy, "bin": write_bin}[fmt]
     paths = []
+    entries = []
     n_shards = max(1, -(-store.n_edges // shard_edges))
     for i in range(n_shards):
         view = _StoreSlice(store, i * shard_edges, shard_edges)
         paths.append(writer(directory / f"shard-{i:05d}.{fmt}", view, chunk_rows))
+        entries.append({"file": f"shard-{i:05d}.{fmt}", "edges": view.n_edges})
+    with open(directory / MANIFEST_NAME, "w") as f:
+        json.dump({"total_edges": store.n_edges, "shards": entries}, f, indent=2)
     return paths
 
 

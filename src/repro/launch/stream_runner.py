@@ -36,6 +36,7 @@ from repro.core.stream import StreamConfig, oneshot_device_bytes
 from repro.data.edge_store import write_bin, write_npy, write_shards
 from repro.kernels.compat import device_put_copied
 from repro.obs.cli import add_obs_args, obs_session
+from repro.resilience.checkpoint import Preempted, StreamCheckpointer
 
 
 @dataclass(frozen=True)
@@ -102,12 +103,16 @@ class StreamRunner:
                 chunk_np = np.concatenate([chunk_np, pad])
         return device_put_copied(chunk_np, self._sharding)
 
-    def run(self, source, n_nodes: int) -> BGVResult:
-        """``source``: host edge array, EdgeStore, or edge-file path."""
+    def run(self, source, n_nodes: int, checkpoint=None,
+            resume: bool | str = False) -> BGVResult:
+        """``source``: host edge array, EdgeStore, or edge-file path.
+        ``checkpoint``/``resume`` pass through to the streaming pipeline
+        (repro/resilience/checkpoint.py ``StreamCheckpointer``)."""
         self._trash = n_nodes
         return biggraphvis(
             source, n_nodes, self.cfg,
             stream=self.runner_cfg.stream, put=self.put,
+            checkpoint=checkpoint, resume=resume,
         )
 
 
@@ -154,6 +159,24 @@ def main() -> None:
                     default="memory",
                     help="edge source for the streamed run (non-memory "
                          "forms are written to a temp dir first)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for streaming detect/supergraph "
+                         "checkpoints (atomic .npz + meta.json, "
+                         "repro/resilience/checkpoint.py); also installs "
+                         "a SIGTERM handler that checkpoints at the next "
+                         "chunk boundary and exits cleanly")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint every N chunk boundaries "
+                         "(0 = round boundaries only)")
+    ap.add_argument("--checkpoint-keep", type=int, default=3,
+                    help="keep the newest K checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the streamed run from the latest valid "
+                         "checkpoint in --checkpoint-dir")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="FA2 divergence sentinel: roll back and damp "
+                         "speed on non-finite forces instead of "
+                         "propagating NaNs into the layout")
     ap.add_argument("--shard", choices=("none", "chunks", "detect", "layout", "all"),
                     default="none",
                     help="multi-device mode over a 1-D mesh of all local "
@@ -186,8 +209,22 @@ def _run(args) -> None:
                          grid_rebuild=args.grid_rebuild,
                          stop_tolerance=args.stop_tolerance,
                          min_iterations=args.min_iterations,
-                         init=args.init)
+                         init=args.init,
+                         nan_guard=args.nan_guard)
     cfg = replace(cfg, scoda=replace(cfg.scoda, block_size=args.block_size))
+
+    ckpt = None
+    if args.checkpoint_dir:
+        ckpt = StreamCheckpointer(
+            args.checkpoint_dir, every_chunks=args.checkpoint_every,
+            keep=args.checkpoint_keep, exit_on_preempt=True,
+        )
+        ckpt.install_preemption_handler()
+        print(f"checkpointing to {args.checkpoint_dir} "
+              f"(every={args.checkpoint_every or 'round boundaries'}, "
+              f"keep={args.checkpoint_keep}; SIGTERM checkpoints and exits)")
+    elif args.resume:
+        raise SystemExit("--resume requires --checkpoint-dir")
 
     res_one = biggraphvis(edges, n, cfg)
     mesh = None
@@ -205,13 +242,20 @@ def _run(args) -> None:
         ),
         shard_chunks=args.shard in ("chunks", "all"),
     ), mesh=mesh)
-    with tempfile.TemporaryDirectory() as tmp:
-        if args.source == "memory":
-            res_str = runner.run(edges, n)
-        else:
-            path = _materialize(edges, args.source, tmp)
-            print(f"streaming from {args.source} store: {path}")
-            res_str = runner.run(path, n)
+    try:
+        with tempfile.TemporaryDirectory() as tmp:
+            if args.source == "memory":
+                src = edges
+            else:
+                src = _materialize(edges, args.source, tmp)
+                print(f"streaming from {args.source} store: {src}")
+            res_str = runner.run(src, n, checkpoint=ckpt, resume=args.resume)
+    except Preempted as e:
+        print(f"preempted: {e} — checkpoint saved, exiting cleanly "
+              f"(restart with --resume)")
+        raise SystemExit(0)
+    if res_str.stream.resumed_at:
+        print(f"resumed from checkpoint at {res_str.stream.resumed_at}")
 
     match = (
         np.array_equal(res_one.labels, res_str.labels)

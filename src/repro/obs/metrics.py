@@ -248,6 +248,28 @@ class MetricsRegistry:
 
 REGISTRY = MetricsRegistry()
 
+# The error/degradation counters (ISSUE 10 satellite): every recovery path in
+# the codebase increments one of these at the point of occurrence, and they
+# are pre-registered (``ensure_error_counters``) by the subsystems that can
+# produce them — so ``dump_text``/``snapshot`` always show them at 0 instead
+# of silently omitting "no errors", and CI can assert on their presence.
+ERROR_COUNTERS = (
+    "errors.io_retries",  # transient store reads retried (resilience.validate)
+    "errors.quarantined_chunks",  # chunks replaced by trash padding
+    "errors.invalid_edges",  # out-of-range/self-loop rows dropped to trash
+    "errors.fa2_recoveries",  # non-finite FA2 iterations rolled back + damped
+    "errors.failed_tiles",  # tile renders that returned an error tile
+    "errors.shed_tiles",  # queued tile misses shed past the deadline
+)
+
+
+def ensure_error_counters(registry: MetricsRegistry | None = None) -> None:
+    """Register every ``errors.*`` counter (at 0) so degradation is visible
+    in metric dumps even when nothing has failed yet."""
+    reg = registry if registry is not None else REGISTRY
+    for name in ERROR_COUNTERS:
+        reg.counter(name)
+
 
 def counter(name: str) -> Counter:
     return REGISTRY.counter(name)

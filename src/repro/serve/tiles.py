@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.core.pipeline import BGVConfig, BGVResult, full_layout_colored
 from repro.data.edge_store import as_edge_store
-from repro.obs.metrics import REGISTRY
+from repro.obs.metrics import REGISTRY, ensure_error_counters
 from repro.obs.trace import get_tracer
 
 # The recompile meter lives in repro.obs.meters now (idempotent listener
@@ -366,16 +366,31 @@ class TilePyramid:
 # Serving engine
 
 
+def error_tile(size: int) -> np.ndarray:
+    """The degraded-service tile: a dark field with a bright diagonal
+    cross — visually unmistakable, never cached, returned when a render
+    fails or a queued miss is shed past the deadline (ISSUE 10: a bad
+    tile must not take down the service or poison the cache)."""
+    img = np.zeros((size, size, 3), np.uint8)
+    img[..., 0] = 40
+    d = np.arange(size)
+    img[d, d] = (255, 64, 64)
+    img[d, size - 1 - d] = (255, 64, 64)
+    return img
+
+
 @dataclass
 class TileRequest:
     """One pan/zoom request: a tile address in, a rendered tile out.
     ``hit`` records whether the cache served it without a render;
-    ``latency_s`` is submit → completion."""
+    ``latency_s`` is submit → completion; ``failed`` marks a degraded
+    completion (error tile from a failed render or a shed request)."""
 
     spec: TileSpec | DrillSpec
     tile: np.ndarray | None = None
     done: bool = False
     hit: bool = False
+    failed: bool = False
     latency_s: float = 0.0
     _t0: float = field(default=0.0, repr=False)
 
@@ -392,25 +407,33 @@ class TileEngine:
     """
 
     def __init__(self, pyramid: TilePyramid, cache_bytes: int = 256 << 20,
-                 slots: int = 8):
+                 slots: int = 8, deadline_s: float | None = None):
         if slots < 1:
             raise ValueError(f"slots must be positive, got {slots}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
         self.pyramid = pyramid
         self.cache = TileCache(cache_bytes)
         self.slots = slots
+        self.deadline_s = deadline_s
         self._pending: deque[TileRequest] = deque()
         self.ticks = 0
         self.served = 0
         self.rendered = 0
+        self.failed = 0
+        self.shed = 0
         self.render_s = 0.0
+        ensure_error_counters()
 
     @property
     def n_pending(self) -> int:
         return len(self._pending)
 
-    def _complete(self, req: TileRequest, tile: np.ndarray, hit: bool) -> None:
+    def _complete(self, req: TileRequest, tile: np.ndarray, hit: bool,
+                  failed: bool = False) -> None:
         req.tile = tile
         req.hit = hit
+        req.failed = failed
         req.done = True
         req.latency_s = time.perf_counter() - req._t0
         self.served += 1
@@ -442,11 +465,39 @@ class TileEngine:
         reg.gauge("serve.cache_evictions").set(self.cache.evictions)
         reg.gauge("serve.cache_hit_rate").set(self.cache.hit_rate)
 
+    def _shed_overdue(self, done: list[TileRequest]) -> None:
+        """Load-shed queued misses older than ``deadline_s``: complete
+        them with an error tile instead of letting an ever-growing
+        backlog starve fresh requests. Sheds from the front (oldest)."""
+        if self.deadline_s is None or not self._pending:
+            return
+        now = time.perf_counter()
+        remaining: deque[TileRequest] = deque()
+        for req in self._pending:
+            if now - req._t0 > self.deadline_s:
+                self.shed += 1
+                REGISTRY.counter("errors.shed_tiles").inc()
+                self._complete(req, error_tile(self.pyramid.cfg.tile_size),
+                               hit=False, failed=True)
+                done.append(req)
+            else:
+                remaining.append(req)
+        self._pending = remaining
+
     def tick(self) -> list[TileRequest]:
         """Render up to ``slots`` distinct pending tile addresses and
-        complete every request waiting on them; returns completions."""
+        complete every request waiting on them; returns completions.
+
+        Degradation policy (ISSUE 10): a render that raises is isolated
+        to its own spec — waiters get an ``error_tile`` with
+        ``failed=True`` and the error tile is *never* cached, so a
+        transient failure retries on the next request instead of
+        poisoning the cache. With ``deadline_s`` set, overdue queued
+        misses are shed the same way before any render work."""
+        done: list[TileRequest] = []
+        self._shed_overdue(done)
         if not self._pending:
-            return []
+            return done
         self.ticks += 1
         batch: list = []
         for req in self._pending:
@@ -454,10 +505,17 @@ class TileEngine:
                 batch.append(req.spec)
                 if len(batch) >= self.slots:
                     break
-        done: list[TileRequest] = []
         t0 = time.perf_counter()
+        tiles: dict = {}
+        broken: set = set()
         with get_tracer().span("serve.tick", batch=len(batch)):
-            tiles = {spec: self.pyramid.render_tile(spec) for spec in batch}
+            for spec in batch:
+                try:
+                    tiles[spec] = self.pyramid.render_tile(spec)
+                except Exception:
+                    broken.add(spec)
+                    self.failed += 1
+                    REGISTRY.counter("errors.failed_tiles").inc()
         tick_s = time.perf_counter() - t0
         self.render_s += tick_s
         self.rendered += len(tiles)
@@ -468,6 +526,10 @@ class TileEngine:
         for req in self._pending:
             if req.spec in tiles:
                 self._complete(req, tiles[req.spec], hit=False)
+                done.append(req)
+            elif req.spec in broken:
+                self._complete(req, error_tile(self.pyramid.cfg.tile_size),
+                               hit=False, failed=True)
                 done.append(req)
             else:
                 remaining.append(req)

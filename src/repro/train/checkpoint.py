@@ -1,119 +1,15 @@
-"""Checkpoint save/restore with elastic resharding.
-
-Format: one .npz per checkpoint (flattened pytree with '/'-joined path
-keys) + a meta.json (step, PRNG key, data cursor, config fingerprint).
-Writes are atomic (tmp + rename) and a keep-last-k window is enforced —
-the two properties that make checkpoint/restart safe under preemption.
-
-Elasticity: arrays are stored unsharded; ``restore`` device_puts every
-leaf onto the *target* shardings, so a checkpoint taken on one mesh
-restores onto any other (scale up/down) as long as shapes match. On a
-real multi-host pod this module would sit on tensorstore/OCDBT; the
-format here keeps the same interface with a single-file backend.
+"""DEPRECATED shim — the checkpoint module moved to
+``repro.resilience.checkpoint`` (ISSUE 10), which the streaming pipeline's
+fault-tolerance layer is built on. Same format, same functions; this path
+re-exports them for the training substrate and existing callers. New code
+should import from ``repro.resilience``.
 """
-from __future__ import annotations
-
-import json
-import os
-import tempfile
-from typing import Any
-
-import jax
-import numpy as np
-
-SEP = "/"
-
-
-def _flatten(tree) -> dict[str, np.ndarray]:
-    flat = {}
-    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
-        key = SEP.join(_key_str(k) for k in path)
-        arr = np.asarray(leaf)
-        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16 etc.): npz-opaque
-            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
-        flat[key] = arr
-    return flat
-
-
-def _key_str(k) -> str:
-    if hasattr(k, "key"):
-        return str(k.key)
-    if hasattr(k, "idx"):
-        return str(k.idx)
-    return str(k)
-
-
-def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
-         keep: int = 3) -> str:
-    """Atomically write checkpoint ``step``; prune to the newest ``keep``."""
-    os.makedirs(ckpt_dir, exist_ok=True)
-    flat = _flatten(tree)
-    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    os.close(fd)
-    try:
-        with open(tmp, "wb") as f:
-            np.savez(f, **flat)
-        os.replace(tmp, final)  # atomic on POSIX
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    meta = {"step": step, **(extra or {})}
-    with open(final + ".meta.json", "w") as f:
-        json.dump(meta, f)
-    _prune(ckpt_dir, keep)
-    return final
-
-
-def _prune(ckpt_dir: str, keep: int) -> None:
-    ckpts = sorted(
-        f for f in os.listdir(ckpt_dir) if f.startswith("step_") and f.endswith(".npz")
-    )
-    for old in ckpts[:-keep]:
-        os.unlink(os.path.join(ckpt_dir, old))
-        meta = os.path.join(ckpt_dir, old + ".meta.json")
-        if os.path.exists(meta):
-            os.unlink(meta)
-
-
-def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
-        int(f[len("step_") : -len(".npz")])
-        for f in os.listdir(ckpt_dir)
-        if f.startswith("step_") and f.endswith(".npz")
-    ]
-    return max(steps) if steps else None
-
-
-def restore(ckpt_dir: str, step: int, like: Any, shardings: Any | None = None):
-    """Rebuild the pytree of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs). ``shardings`` (matching pytree of NamedSharding)
-    re-shards onto the CURRENT mesh — elastic restore."""
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    data = np.load(path)
-    leaves_with_path = jax.tree_util.tree_leaves_with_path(like)
-    vals = []
-    for kpath, leaf in leaves_with_path:
-        key = SEP.join(_key_str(k) for k in kpath)
-        arr = data[key]
-        want = np.dtype(leaf.dtype) if not hasattr(leaf.dtype, "itemsize") else leaf.dtype
-        if arr.dtype.kind == "u" and np.dtype(want).kind == "V":
-            arr = arr.view(want)  # round-trip ml_dtypes (bfloat16) storage
-        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-        vals.append(arr)
-    treedef = jax.tree_util.tree_structure(like)
-    tree = jax.tree_util.tree_unflatten(treedef, vals)
-    if shardings is not None:
-        tree = jax.tree_util.tree_map(
-            lambda x, s: jax.device_put(x, s), tree, shardings
-        )
-    else:
-        tree = jax.tree_util.tree_map(jax.device_put, tree)
-    meta_path = path + ".meta.json"
-    meta = {}
-    if os.path.exists(meta_path):
-        with open(meta_path) as f:
-            meta = json.load(f)
-    return tree, meta
+from repro.resilience.checkpoint import (  # noqa: F401
+    SEP,
+    _flatten,
+    _key_str,
+    _prune,
+    latest_step,
+    restore,
+    save,
+)

@@ -65,12 +65,12 @@ def test_signature_snapshot():
     renaming/removing a parameter is an API break and must show up here."""
     assert list(inspect.signature(repro.biggraphvis).parameters) == [
         "source", "n_nodes", "cfg", "stream", "put",
-        "render_path", "render_cfg",
+        "render_path", "render_cfg", "checkpoint", "resume",
     ]
     assert list(inspect.signature(repro.default_config).parameters) == [
         "n_nodes", "n_edges", "degree_threshold", "rounds", "iterations",
         "s_cap", "repulsion", "grid_size", "grid_window", "grid_rebuild",
-        "stop_tolerance", "min_iterations", "init",
+        "stop_tolerance", "min_iterations", "init", "nan_guard",
     ]
     assert list(
         inspect.signature(repro.BGVResult.render).parameters
