@@ -509,7 +509,8 @@ def _layout_jit(edges, weights, mass, n: int, cfg: FA2Config, pos0):
 
         def live_branch():
             c, cell2, order2, row = live(core, cell, order, it)
-            done = (it + 1 >= cfg.min_iterations) & (
+            # row[0] < 0 marks a nan_guard recovery — never "converged".
+            done = (it + 1 >= cfg.min_iterations) & (row[0] >= 0) & (
                 row[0] <= cfg.stop_tolerance * row[1]
             )
             out = c + ((cell2, order2) if carry_grid else ())

@@ -166,10 +166,12 @@ class StreamStats:
     raster_chunks: int = 0
     stage_seconds: dict = field(default_factory=dict)
     # Resilience accounting (ISSUE 10): validation/quarantine tallies are
-    # copied from the stream's ``ValidationAccounting`` (the matching
-    # ``errors.*`` counters increment at the point of occurrence);
-    # ``resumed_at`` records the checkpoint cursor a resumed run picked up
-    # from ("" for an uninterrupted run).
+    # copied from the stream's ``ValidationAccounting``. ``quarantined_*``
+    # report *distinct* chunks (a permanently-bad chunk is hit once per
+    # pass; the per-occurrence tally is the ``errors.quarantined_chunks``
+    # counter, which increments at the point of occurrence). ``resumed_at``
+    # records the checkpoint cursor a resumed run picked up from ("" for
+    # an uninterrupted run).
     retries: int = 0
     quarantined_chunks: int = 0
     quarantined_chunk_ids: list = field(default_factory=list)
@@ -794,7 +796,12 @@ def stream_pipeline(
         ckpt_dir = resume if isinstance(resume, (str,)) else (
             checkpoint.ckpt_dir if checkpoint is not None else None
         )
-        found = restore_latest_valid(ckpt_dir) if ckpt_dir else None
+        # A checkpoint without the resume cursor (meta lost to a crash)
+        # is invalid — walk back to the previous one instead of crashing.
+        found = (
+            restore_latest_valid(ckpt_dir, valid=lambda a, m: "chunk" in m)
+            if ckpt_dir else None
+        )
         if found is not None:
             arrays, meta = found
             if meta.get("fingerprint") and meta["fingerprint"] != fingerprint:
@@ -803,6 +810,8 @@ def stream_pipeline(
                     f"fingerprint {meta['fingerprint']}, this run is "
                     f"{fingerprint} — resuming would not be bit-identical"
                 )
+            if checkpoint is not None:
+                checkpoint.seed(meta)
             phase = meta.get("phase", "detect")
             cursor = {"round": meta.get("round", 0), "chunk": meta["chunk"]}
             if phase == "detect":
@@ -845,8 +854,11 @@ def stream_pipeline(
         stats.stage_seconds["supergraph_s"] = time.perf_counter() - t0
     stats.seconds = sum(stats.stage_seconds.values())
     stats.retries = stream.acct.retries
-    stats.quarantined_chunks = len(stream.acct.quarantined)
-    stats.quarantined_chunk_ids = list(stream.acct.quarantined)
+    # acct.quarantined is per-occurrence (a bad chunk is hit once per pass);
+    # the stats mirror reports distinct chunks.
+    qids = sorted(set(stream.acct.quarantined))
+    stats.quarantined_chunks = len(qids)
+    stats.quarantined_chunk_ids = qids
     stats.dropped_edges = stream.acct.dropped_edges
     stats.publish()
     return labels, gdeg, sg, q, stats

@@ -82,29 +82,46 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
     final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     os.close(fd)
+    fd_m, tmp_meta = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd_m)
     try:
         with open(tmp, "wb") as f:
             np.savez(f, **flat)
+        # Meta lands (atomically) BEFORE the npz rename: a kill between the
+        # two leaves an orphaned meta (invisible — discovery keys off .npz)
+        # rather than a meta-less npz that readers would mis-trust.
+        meta = {"step": step, **(extra or {})}
+        with open(tmp_meta, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp_meta, final + ".meta.json")
         os.replace(tmp, final)  # atomic on POSIX
     finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    meta = {"step": step, **(extra or {})}
-    with open(final + ".meta.json", "w") as f:
-        json.dump(meta, f)
+        for t in (tmp, tmp_meta):
+            if os.path.exists(t):
+                os.unlink(t)
     _prune(ckpt_dir, keep)
     return final
 
 
 def _prune(ckpt_dir: str, keep: int) -> None:
+    names = os.listdir(ckpt_dir)
     ckpts = sorted(
-        f for f in os.listdir(ckpt_dir) if f.startswith("step_") and f.endswith(".npz")
+        f for f in names if f.startswith("step_") and f.endswith(".npz")
     )
     for old in ckpts[:-keep]:
         os.unlink(os.path.join(ckpt_dir, old))
         meta = os.path.join(ckpt_dir, old + ".meta.json")
         if os.path.exists(meta):
             os.unlink(meta)
+    # Orphaned metas (kill before the npz rename, pruned/corrupt npz).
+    for f in names:
+        if (f.startswith("step_") and f.endswith(".npz.meta.json")
+                and not os.path.exists(
+                    os.path.join(ckpt_dir, f[: -len(".meta.json")]))):
+            try:
+                os.unlink(os.path.join(ckpt_dir, f))
+            except FileNotFoundError:
+                pass
 
 
 def latest_step(ckpt_dir: str) -> int | None:
@@ -165,18 +182,34 @@ def load_arrays(ckpt_dir: str, step: int) -> tuple[dict, dict]:
     return arrays, meta
 
 
-def restore_latest_valid(ckpt_dir: str) -> tuple[dict, dict] | None:
+def restore_latest_valid(
+    ckpt_dir: str,
+    valid: Callable[[dict, dict], bool] | None = None,
+) -> tuple[dict, dict] | None:
     """Newest loadable checkpoint as ``(arrays, meta)``, or None if the
     directory holds none. A corrupt newest file (impossible via the atomic
-    rename, but disks bit-rot) is deleted and the walk continues back
-    through the keep-last-k window."""
+    rename, but disks bit-rot) is deleted — npz and its meta together —
+    and the walk continues back through the keep-last-k window. ``valid``
+    (arrays, meta) lets callers demand semantic completeness (e.g. the
+    stream resume cursor keys) with the same walk-back-on-failure."""
     step = latest_step(ckpt_dir)
     while step is not None:
+        bad = False
         try:
-            return load_arrays(ckpt_dir, step)
+            arrays, meta = load_arrays(ckpt_dir, step)
+            if valid is None or valid(arrays, meta):
+                return arrays, meta
+            bad = True  # loadable but incomplete → walk back
         except Exception:  # partial/corrupt → try the previous one
-            os.unlink(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
-            step = latest_step(ckpt_dir)
+            bad = True
+        if bad:
+            path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+            for p in (path, path + ".meta.json"):
+                try:
+                    os.unlink(p)
+                except FileNotFoundError:
+                    pass
+        step = latest_step(ckpt_dir)
     return None
 
 
@@ -266,5 +299,17 @@ class StreamCheckpointer:
         self._preempted = False
         return path
 
+    def seed(self, meta: dict) -> None:
+        """Continue the save sequence past a restored checkpoint's step.
+        Without this a resumed process restarts ``_seq`` at 0 while the
+        pre-kill ``step_`` files are still on disk: ``_prune`` keeps the
+        lexically newest names, so every post-resume save would be deleted
+        on arrival (and ``latest_step`` would keep answering with the
+        stale pre-kill checkpoint) until the counter caught up."""
+        self._seq = max(self._seq, int(meta.get("step", 0)))
+
     def restore_latest(self) -> tuple[dict, dict] | None:
-        return restore_latest_valid(self.ckpt_dir)
+        found = restore_latest_valid(self.ckpt_dir)
+        if found is not None:
+            self.seed(found[1])
+        return found

@@ -122,8 +122,49 @@ def test_restore_latest_valid_walks_back_past_corruption(tmp_path):
     bad.write_bytes(b"not an npz at all")  # post-rename bit-rot
     arrays, meta = restore_latest_valid(d)
     assert meta["step"] == 1 and len(arrays["x"]) == 3
-    assert not bad.exists()  # the corrupt newest was unlinked
+    assert not bad.exists()  # the corrupt newest was unlinked...
+    assert not (tmp_path / "step_00000002.npz.meta.json").exists()  # +meta
     assert restore_latest_valid(str(tmp_path / "empty")) is None
+
+
+def test_restore_latest_valid_predicate_walks_back(tmp_path):
+    """A loadable npz whose meta lacks the resume cursor (lost to a crash)
+    must be walked back past, not handed to the caller to KeyError on."""
+    d = str(tmp_path)
+    save(d, 1, {"x": np.arange(3)}, extra={"chunk": 1})
+    save(d, 2, {"x": np.arange(4)}, extra={"chunk": 2})
+    (tmp_path / "step_00000002.npz.meta.json").unlink()
+    arrays, meta = restore_latest_valid(d, valid=lambda a, m: "chunk" in m)
+    assert meta["step"] == 1 and meta["chunk"] == 1
+    assert not (tmp_path / "step_00000002.npz").exists()
+
+
+def test_prune_removes_orphaned_meta(tmp_path):
+    """A kill between the meta rename and the npz rename leaves a meta
+    with no npz; the next save's prune sweeps it."""
+    d = str(tmp_path)
+    save(d, 1, {"x": np.arange(3)}, extra={"chunk": 1}, keep=2)
+    orphan = tmp_path / "step_00000099.npz.meta.json"
+    orphan.write_text("{}")
+    save(d, 2, {"x": np.arange(3)}, extra={"chunk": 2}, keep=2)
+    assert not orphan.exists()
+    assert latest_step(d) == 2  # discovery keys off .npz, never the meta
+
+
+def test_checkpointer_seq_seeded_on_restore(tmp_path):
+    """``restore_latest`` must continue the save sequence past the restored
+    step (regression: a resumed process restarted _seq at 0, so its saves
+    sorted below the on-disk window and were pruned on arrival)."""
+    d = str(tmp_path)
+    ck = StreamCheckpointer(d, every_chunks=1, keep=3)
+    for i in range(5):
+        ck.boundary("detect", 0, i, False, lambda: {"x": np.arange(3)})
+    assert latest_step(d) == 5
+    ck2 = StreamCheckpointer(d, every_chunks=1, keep=3)
+    found = ck2.restore_latest()
+    assert found is not None and found[1]["step"] == 5
+    ck2.boundary("detect", 0, 5, False, lambda: {"x": np.arange(3)})
+    assert latest_step(d) == 6  # not pruned-on-arrival under steps 3..5
 
 
 def test_train_checkpoint_shim_reexports():
@@ -211,6 +252,43 @@ def test_resume_layout_bit_identical(tmp_path):
     assert (np.asarray(res2.positions).tobytes()
             == np.asarray(res.positions).tobytes())
     assert res2.modularity == res.modularity
+
+
+def test_post_resume_checkpoints_advance_past_kill_point(tmp_path):
+    """The resumed run's own checkpoints must land *after* the pre-kill
+    steps: a second preemption then resumes from post-resume progress,
+    not from the first kill point."""
+    ck = StreamCheckpointer(str(tmp_path), every_chunks=1,
+                            on_boundary=KillSwitch(10))
+    with pytest.raises(SimulatedPreemption):
+        _run(_edges(), checkpoint=ck)
+    stale = latest_step(str(tmp_path))
+    ck2 = StreamCheckpointer(str(tmp_path), every_chunks=1)
+    labels, gdeg, sg, q, stats = _run(_edges(), checkpoint=ck2, resume=True)
+    assert stats.resumed_at and ck2.saves > 0
+    assert latest_step(str(tmp_path)) > stale
+    _, meta = restore_latest_valid(str(tmp_path))
+    assert meta["step"] > stale
+    assert _digest(labels, gdeg, sg, q) == _baseline_digest()
+
+
+def test_resume_walks_back_past_metaless_checkpoint(tmp_path):
+    """A checkpoint npz whose meta.json is gone (bit-rot / legacy crash)
+    has no resume cursor: ``stream_pipeline`` must fall back to the
+    previous checkpoint, not KeyError or skip the fingerprint check."""
+    want = _baseline_digest()
+    ck = StreamCheckpointer(str(tmp_path), every_chunks=1,
+                            on_boundary=KillSwitch(10))
+    with pytest.raises(SimulatedPreemption):
+        _run(_edges(), checkpoint=ck)
+    step = latest_step(str(tmp_path))
+    (tmp_path / f"step_{step:08d}.npz.meta.json").unlink()
+    labels, gdeg, sg, q, stats = _run(
+        _edges(), checkpoint=StreamCheckpointer(str(tmp_path), every_chunks=1),
+        resume=True,
+    )
+    assert stats.resumed_at
+    assert _digest(labels, gdeg, sg, q) == want
 
 
 def test_resume_fingerprint_mismatch_raises(tmp_path):
@@ -303,9 +381,11 @@ def test_permanent_io_error_quarantines_and_completes():
     reg_before = REGISTRY.counter("errors.quarantined_chunks").value
     labels, gdeg, sg, q, stats = _run(
         store, stream_cfg=StreamConfig(chunk_size=CHUNK, validation=pol))
-    # chunk 3 is unreadable on every pass (ROUNDS detect + 1 supergraph)
-    assert stats.quarantined_chunks == ROUNDS + 1
-    assert set(stats.quarantined_chunk_ids) == {3}
+    # chunk 3 is unreadable on every pass (ROUNDS detect + 1 supergraph):
+    # the obs counter tallies per-occurrence, StreamStats reports the
+    # distinct chunks (regression: the stats mirror double-counted).
+    assert stats.quarantined_chunks == 1
+    assert stats.quarantined_chunk_ids == [3]
     assert REGISTRY.counter("errors.quarantined_chunks").value - reg_before \
         == ROUNDS + 1
     labels = np.asarray(labels)
@@ -448,6 +528,14 @@ def test_nan_guard_recovers_from_poisoned_forces():
                         min_iterations=1)
     _, tr, iters = fa2.layout(e, w, mass, n, cfg)
     assert fa2.recovery_count(tr[:int(iters)]) == int(iters)
+    # tol ≤ 1 is the sharp case: a recovery row [-1,-1,s] satisfies
+    # row[0] <= tol*row[1] (-1 <= -tol), so without the row[0] >= 0 guard
+    # the layout froze right after the first rollback
+    cfg = fa2.FA2Config(iterations=20, nan_guard=True, stop_tolerance=0.5,
+                        min_iterations=1)
+    _, tr, iters = fa2.layout(e, w, mass, n, cfg)
+    assert int(iters) == 20, "layout froze on a nan_guard recovery row"
+    assert fa2.recovery_count(tr) == 20
 
 
 # ------------------------------------------------- tile-engine degradation
